@@ -1,0 +1,128 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the JSONs."""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+ARCH_ORDER = [
+    "qwen1.5-0.5b", "starcoder2-3b", "qwen3-14b", "stablelm-3b", "rwkv6-7b",
+    "granite-moe-3b-a800m", "moonshot-v1-16b-a3b", "musicgen-large",
+    "chameleon-34b", "zamba2-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(cell):
+    path = os.path.join(HERE, "dryrun", cell + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_cell(d, opt=None):
+    if d is None:
+        return None
+    if d["status"] == "skipped":
+        return {"skip": True, "reason": d.get("reason", "")}
+    if d["status"] != "ok":
+        return {"error": d.get("error", "")[:80]}
+    r = d["roofline"]
+    m = d["memory_analysis"]
+    mem = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"] +
+           m.get("output_size_in_bytes", 0)) / 2**30
+    out = {
+        "mem_gib": mem,
+        "compute_s": r["compute_s"],
+        "memory_s": r["memory_s"],
+        "collective_s": r["collective_s"],
+        "bottleneck": r["bottleneck"],
+        "useful": r["useful_flops_ratio"],
+        "frac": r["roofline_fraction"],
+        "flops": r["dot_flops_local"],
+        "coll_gb": r["collective_bytes_local"] / 1e9,
+        "variant": d.get("resolved_variant", "base"),
+    }
+    return out
+
+
+def dryrun_table(pod):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = load(f"{arch}__{shape}__{pod}")
+            c = fmt_cell(d)
+            if c is None:
+                continue
+            if c.get("skip"):
+                rows.append(f"| {arch} | {shape} | SKIP (sub-quadratic rule) | | | |")
+                continue
+            rows.append(
+                f"| {arch} | {shape} | ok | {c['mem_gib']:.1f} | "
+                f"{c['flops']/1e12:.2f} | {c['coll_gb']:.1f} |"
+            )
+    hdr = ("| arch | shape | status | bytes/device (GiB) | HLO TFLOPs/chip | "
+           "collective GB/chip |\n|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table(opt=False):
+    rows = []
+    suffix = "__auto" if opt else ""
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = load(f"{arch}__{shape}__pod1{suffix}")
+            c = fmt_cell(d)
+            if c is None or c.get("skip") or c.get("error"):
+                continue
+            rows.append(
+                f"| {arch} | {shape} | {c['compute_s']:.4f} | {c['memory_s']:.4f} | "
+                f"{c['collective_s']:.4f} | {c['bottleneck']} | {c['useful']:.2f} | "
+                f"{c['frac']:.3f} |" + (f" {c['variant']} |" if opt else "")
+            )
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck | "
+           "MODEL/HLO flops | roofline frac |" + (" policy |" if opt else ""))
+    sep = "|---" * (9 if opt else 8) + "|"
+    return hdr + "\n" + sep + "\n" + "\n".join(rows)
+
+
+def before_after():
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            b = fmt_cell(load(f"{arch}__{shape}__pod1"))
+            o = fmt_cell(load(f"{arch}__{shape}__pod1__auto"))
+            if not b or not o or b.get("skip") or o.get("skip"):
+                continue
+            if b.get("error") or o.get("error"):
+                continue
+            sb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            so = max(o["compute_s"], o["memory_s"], o["collective_s"])
+            rows.append(
+                f"| {arch} | {shape} | {b['frac']:.3f} | {o['frac']:.3f} | "
+                f"{sb/so:.1f}x | {b['mem_gib']:.0f} -> {o['mem_gib']:.0f} | "
+                f"{o['variant']} |"
+            )
+    hdr = ("| arch | shape | baseline frac | optimized frac | step-time gain | "
+           "GiB/device | policy |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("### pod1 (16x16)\n")
+        print(dryrun_table("pod1"))
+        print("\n### pod2 (2x16x16)\n")
+        print(dryrun_table("pod2"))
+    if which in ("roofline", "all"):
+        print("\n### baseline roofline (pod1)\n")
+        print(roofline_table(False))
+    if which in ("opt", "all"):
+        print("\n### optimized (auto policy)\n")
+        print(roofline_table(True))
+        print("\n### before/after\n")
+        print(before_after())

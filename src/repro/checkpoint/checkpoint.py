@@ -1,0 +1,121 @@
+"""Sharded checkpointing: atomic, async, elastic.
+
+Layout: <dir>/step_<n>/
+  meta.json            step, arch, leaf manifest
+  <leaf_idx>.npy       one file per pytree leaf
+
+Guarantees:
+  * ATOMIC — written to ``.tmp-...`` then os.rename'd; a crash mid-save
+    never corrupts the latest checkpoint; ``latest_step`` only sees
+    completed saves.
+  * ASYNC — ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread; ``wait()`` joins before the next
+    save (single outstanding write, bounded memory).
+  * ELASTIC — restore() re-shards onto WHATEVER mesh/sharding the caller
+    provides: leaves are full logical arrays on disk, so a 512-chip
+    checkpoint restores on 256 chips (or 1 CPU) unchanged.
+
+Fault-tolerance contract with runtime.fault_tolerance: the training loop
+checkpoints every N steps; on failure the watchdog restarts from
+``latest_step`` and the data pipeline replays deterministically from that
+step (data/pipeline.py is a pure function of step).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer"]
+
+Pytree = Any
+
+
+class Checkpointer:
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Pytree, extra_meta: Optional[dict] = None):
+        leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: x is None)
+        host_leaves = [None if l is None else np.asarray(l) for l in leaves]
+        self._write(step, host_leaves, str(treedef), extra_meta or {})
+
+    def save_async(self, step: int, tree: Pytree, extra_meta: Optional[dict] = None):
+        self.wait()
+        leaves, treedef = jax.tree.flatten(tree, is_leaf=lambda x: x is None)
+        # Synchronous device->host snapshot; disk IO deferred to the thread.
+        host_leaves = [None if l is None else np.asarray(l) for l in leaves]
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_leaves, str(treedef), extra_meta or {}),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves, treedef_str: str, extra_meta: dict):
+        final = os.path.join(self.directory, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = []
+        for i, leaf in enumerate(host_leaves):
+            if leaf is None:
+                manifest.append(None)
+            else:
+                np.save(os.path.join(tmp, f"{i}.npy"), leaf)
+                manifest.append({"dtype": str(leaf.dtype), "shape": list(leaf.shape)})
+        meta = {"step": step, "n_leaves": len(host_leaves), "manifest": manifest,
+                "treedef": treedef_str, **extra_meta}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = [
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        ]
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        step: int,
+        like: Pytree,
+        shardings: Optional[Pytree] = None,
+    ) -> Pytree:
+        """Restore into the structure of ``like``; device_put with
+        ``shardings`` if given (elastic re-shard happens here)."""
+        path = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        leaves_like, treedef = jax.tree.flatten(like, is_leaf=lambda x: x is None)
+        assert meta["n_leaves"] == len(leaves_like), "pytree structure changed"
+        out = []
+        shard_leaves = (
+            jax.tree.flatten(shardings, is_leaf=lambda x: x is None)[0]
+            if shardings is not None else [None] * len(leaves_like)
+        )
+        for i, (ll, sh) in enumerate(zip(leaves_like, shard_leaves)):
+            if ll is None:
+                out.append(None)
+                continue
+            arr = np.load(os.path.join(path, f"{i}.npy"))
+            out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out)

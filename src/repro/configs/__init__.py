@@ -1,0 +1,1 @@
+from .base import SHAPES, ArchConfig, ShapeSpec, get_config, input_specs, list_archs  # noqa: F401

@@ -1,0 +1,4 @@
+"""The paper's gesture-recognition SNN (Table II)."""
+from ..core.network import gesture_net
+
+CONFIG = gesture_net()

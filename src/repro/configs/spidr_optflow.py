@@ -1,0 +1,4 @@
+"""The paper's optical-flow SNN (Table II)."""
+from ..core.network import optical_flow_net
+
+CONFIG = optical_flow_net()

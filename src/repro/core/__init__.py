@@ -1,0 +1,27 @@
+"""SpiDR core: the paper's contribution as composable JAX modules.
+
+Layer map (paper mechanism -> module):
+  C1 CIM macro            -> cim_macro
+  C2 multi-precision      -> quant
+  C3 zero-skipping / AER  -> zero_skip, s2a
+  C4 even/odd batching    -> s2a, energy
+  C5 hardware im2col      -> layers.im2col
+  C6 operating modes      -> modes
+  C7 timestep pipelining  -> pipeline
+  C8 IF/LIF neurons       -> neuron
+  C9 calibrated perf model-> energy
+"""
+from . import (  # noqa: F401
+    cim_macro,
+    energy,
+    layers,
+    modes,
+    network,
+    neuron,
+    pipeline,
+    quant,
+    s2a,
+    zero_skip,
+)
+from .neuron import NeuronConfig  # noqa: F401
+from .quant import QuantSpec  # noqa: F401

@@ -1,0 +1,160 @@
+"""Compute / neuron macro functional model (paper C1, Sec II-A, Fig 7-9).
+
+The compute macro is a 160x48 10T SRAM array: the top 128 rows store
+synaptic weights, the remaining 32 rows store partial membrane potentials.
+Column peripherals implement a 3-stage Read / Compute / Store pipeline that
+adds one weight row into one Vmem row per cycle.
+
+Geometry and mapping (Fig 9):
+  * Each IFspad row Y (0..127) corresponds to weight row Y.
+  * Each IFspad column X (0..15) corresponds to the Vmem row *pair*
+    (2X, 2X+1): Vmem precision is 2W-1 bits, so one logical Vmem vector
+    occupies two staggered physical rows — the even row holds the Vmems of
+    even-numbered weights, the odd row those of odd-numbered weights.
+  * A spike at (Y, X) therefore triggers TWO row operations:
+      even cycle:  Vmem[2X]   += even-numbered weights of row Y
+      odd  cycle:  Vmem[2X+1] += odd-numbered weights of row Y
+
+Because the design is digital, the functional result of processing a whole
+IFspad is exactly
+
+    Vmem[x, n] = saturate( sum_y spikes[y, x] * W[y, n] )
+
+for every output neuron n packed in the columns (48/W_b of them).  The
+*order* of saturating adds matters only when intermediate sums leave the
+(2W-1)-bit range; ``accumulate_sequential`` reproduces the per-op
+saturation order of the silicon, ``accumulate`` is the vectorized wide-sum
+variant used by the fast path (and by the Pallas kernel).  Tests assert
+they agree whenever no intermediate overflow occurs and that both stay in
+range always.
+
+Cycle accounting (used by pipeline.py / energy.py):
+  * 2 cycles per spike (even+odd), 3-stage pipeline => throughput 1 row
+    op/cycle once full, +2 fill/drain cycles per burst.
+  * Neuron macro: fixed 66 cycles (Eq. 3) = 2*32 partial->full Vmem
+    accumulation + threshold compare sweeps + 2 pipeline cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantSpec, saturate
+
+__all__ = [
+    "MacroConfig",
+    "CM_WEIGHT_ROWS",
+    "CM_VMEM_ROWS",
+    "CM_COLS",
+    "IFSPAD_ROWS",
+    "IFSPAD_COLS",
+    "NEURON_MACRO_CYCLES",
+    "accumulate",
+    "accumulate_sequential",
+    "macro_cycles",
+    "pack_weight_rows",
+]
+
+# Fixed silicon geometry (Sec II-A).
+CM_WEIGHT_ROWS = 128   # weight rows per compute macro
+CM_VMEM_ROWS = 32      # physical Vmem rows (16 logical pairs)
+CM_COLS = 48           # bit columns
+IFSPAD_ROWS = 128      # IFspad rows  == weight rows
+IFSPAD_COLS = 16       # IFspad cols  == logical Vmem pairs
+NEURON_MACRO_CYCLES = 2 * CM_VMEM_ROWS + 2  # Eq. (3): 66
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroConfig:
+    spec: QuantSpec
+    weight_rows: int = CM_WEIGHT_ROWS
+    vmem_pairs: int = IFSPAD_COLS
+    cols: int = CM_COLS
+
+    @property
+    def neurons(self) -> int:
+        """Output neurons whose partial Vmems live in ONE Vmem row pair."""
+        return self.cols // self.spec.weight_bits
+
+    @property
+    def max_output_neurons(self) -> int:
+        """Eq. (1): (48/W_b) * 16 output neurons per macro (conv mode)."""
+        return self.neurons * self.vmem_pairs
+
+
+def pack_weight_rows(w: jax.Array, cfg: MacroConfig) -> jax.Array:
+    """Validate/clip a (fan_in_chunk, neurons) int weight block for a macro.
+
+    The silicon stores weights as W_b-bit fields along the 48 columns; the
+    functional model just keeps them as int8 with range checking.
+    """
+    assert w.ndim == 2
+    fan_in, neurons = w.shape
+    if fan_in > cfg.weight_rows:
+        raise ValueError(f"fan-in chunk {fan_in} exceeds {cfg.weight_rows} rows")
+    if neurons > cfg.neurons:
+        raise ValueError(
+            f"{neurons} neurons exceed {cfg.neurons} = 48/{cfg.spec.weight_bits}"
+        )
+    return jnp.clip(w, cfg.spec.w_min, cfg.spec.w_max).astype(jnp.int8)
+
+
+def accumulate(
+    spikes: jax.Array,  # (rows, pairs) in {0,1}
+    weights: jax.Array,  # (rows, neurons) int
+    vmem: jax.Array,     # (pairs, neurons) int32, the partial Vmems
+    spec: QuantSpec,
+) -> jax.Array:
+    """Vectorized weight->Vmem accumulation of one full IFspad.
+
+    Wide int32 matmul then one saturation — the fast-path semantics (and the
+    semantics of the spike_gemm Pallas kernel).
+    """
+    acc = jnp.einsum(
+        "yx,yn->xn",
+        spikes.astype(jnp.int32),
+        weights.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return saturate(vmem.astype(jnp.int32) + acc, spec)
+
+
+def accumulate_sequential(
+    spikes: np.ndarray, weights: np.ndarray, vmem: np.ndarray, spec: QuantSpec
+) -> np.ndarray:
+    """Per-op saturating accumulation in silicon order (numpy reference).
+
+    Processes spikes row-major (the S2A scans the IFspad row by row), with
+    the even cycle then the odd cycle per spike, saturating after every
+    row-add exactly like the column adder chain.
+    """
+    v = vmem.astype(np.int64).copy()
+    rows, pairs = spikes.shape
+    n = weights.shape[1]
+    even = np.arange(n) % 2 == 0
+    for y in range(rows):
+        for x in range(pairs):
+            if spikes[y, x]:
+                # even cycle
+                v[x, even] = np.clip(
+                    v[x, even] + weights[y, even], spec.v_min, spec.v_max
+                )
+                # odd cycle
+                v[x, ~even] = np.clip(
+                    v[x, ~even] + weights[y, ~even], spec.v_min, spec.v_max
+                )
+    return v.astype(np.int32)
+
+
+def macro_cycles(nnz: int, pipeline_fill: int = 2) -> int:
+    """Compute-macro cycles to drain an IFspad with ``nnz`` spikes.
+
+    2 row ops per spike (even+odd), 1 op/cycle steady state, plus fill/
+    drain of the 3-stage R/C/S peripheral pipeline.
+    """
+    if nnz == 0:
+        return 0
+    return 2 * int(nnz) + pipeline_fill

@@ -1,0 +1,179 @@
+"""Functional spiking layers (paper C5 + C1: input loader + macro compute).
+
+The input loader performs im2col *in hardware* during execution — including
+zero padding and stride — so a spiking convolution becomes a spike-matrix x
+weight-matrix product the CIM macro can execute (binary inputs make the
+GEMM multiplication-free).  We mirror that structure exactly:
+
+    spikes (B, H, W, C) --im2col--> (B, P, R*S*C) binary
+    weights (R*S*C, K)  (quantized, weight-stationary)
+    partial Vmem (B, P, K) = spike_gemm(im2col, W)
+    neuron macro: full Vmem update + fire + reset   (neuron.py)
+
+Two execution paths share this structure:
+  * ``mode="train"``  — float weights fake-quantized with STE (QAT);
+    surrogate-gradient spike function; differentiable end to end.
+  * ``mode="int"``    — int8 weights, int32 Vmem with (2W-1)-bit
+    saturation: bit-exact with the macro datapath (tests cross-check
+    against ``cim_macro.accumulate_sequential``).
+
+The Pallas `spike_gemm` kernel is a drop-in for the einsum on TPU; layers
+take a ``matmul`` callable so the kernel can be injected without changing
+layer logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .neuron import NeuronConfig, neuron_step, neuron_step_int
+from .quant import QuantSpec, quantize, saturate, ste_quantize
+
+__all__ = [
+    "SpikingConvParams",
+    "SpikingDenseParams",
+    "im2col",
+    "spiking_conv",
+    "spiking_dense",
+    "maxpool2d",
+    "init_conv",
+    "init_dense",
+]
+
+
+def _default_matmul(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """(…, F) x (F, K) — contraction over fan-in."""
+    return jnp.einsum("...f,fk->...k", spikes, w)
+
+
+# ---------------------------------------------------------------------------
+# Input loader: hardware im2col with padding + stride (Sec II-D).
+# ---------------------------------------------------------------------------
+def im2col(
+    x: jax.Array, kh: int, kw: int, stride: int = 1, padding: int = 0
+) -> jax.Array:
+    """(B, H, W, C) -> (B, H_out*W_out, kh*kw*C) patches.
+
+    Uses XLA's patch extraction; the IFspad layout (row = fan-in element,
+    column = output position) is the transpose of the returned matrix.
+    """
+    b, h, w, c = x.shape
+    x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    h_out = (h + 2 * padding - kh) // stride + 1
+    w_out = (w + 2 * padding - kw) // stride + 1
+    # Gather patches via conv_general_dilated_patches (NHWC).
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H_out, W_out, C*kh*kw) with feature order (c, kh, kw)
+    patches = patches.reshape(b, h_out * w_out, c * kh * kw)
+    # Reorder features (c,kh,kw) -> (kh,kw,c) to match HWIO weight layout.
+    patches = patches.reshape(b, h_out * w_out, c, kh * kw)
+    patches = jnp.swapaxes(patches, -1, -2).reshape(b, h_out * w_out, kh * kw * c)
+    return patches
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikingConvParams:
+    kh: int
+    kw: int
+    stride: int = 1
+    padding: int = 1
+    neuron: NeuronConfig = dataclasses.field(default_factory=NeuronConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpikingDenseParams:
+    neuron: NeuronConfig = dataclasses.field(default_factory=NeuronConfig)
+
+
+def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32, gain: float = 3.0):
+    """He-style uniform init with an SNN gain (spiking nets need hotter
+    init than ANNs so the first layers fire at event-camera sparsity)."""
+    scale = gain / jnp.sqrt(kh * kw * c_in)
+    return jax.random.uniform(
+        key, (kh * kw * c_in, c_out), dtype, minval=-scale, maxval=scale
+    )
+
+
+def init_dense(key, n_in, n_out, dtype=jnp.float32, gain: float = 3.0):
+    scale = gain / jnp.sqrt(n_in)
+    return jax.random.uniform(key, (n_in, n_out), dtype, minval=-scale, maxval=scale)
+
+
+def spiking_conv(
+    spikes: jax.Array,          # (B, H, W, C) binary
+    w: jax.Array,               # (kh*kw*C, K) float (train) or int8 (int)
+    vmem: jax.Array,            # (B, H_out, W_out, K) carry state
+    p: SpikingConvParams,
+    spec: QuantSpec,
+    mode: str = "train",
+    matmul: Optional[Callable] = None,
+    w_scale: Optional[jax.Array] = None,
+):
+    """One timestep of a spiking conv layer. Returns (vmem', out_spikes)."""
+    matmul = matmul or _default_matmul
+    b = spikes.shape[0]
+    cols = im2col(spikes, p.kh, p.kw, p.stride, p.padding)  # (B,P,F)
+    h_out, w_out, k = vmem.shape[1], vmem.shape[2], w.shape[1]
+
+    if mode == "train":
+        wq = ste_quantize(w, spec.weight_bits)
+        current = matmul(cols, wq).reshape(b, h_out, w_out, k)
+        return neuron_step(vmem, current, p.neuron)
+
+    # Integer (bit-exact) path.
+    assert w.dtype == jnp.int8 and w_scale is not None
+    acc = matmul(cols.astype(jnp.int32), w.astype(jnp.int32))
+    partial = saturate(acc, spec).reshape(b, h_out, w_out, k)
+    thr_int = jnp.int32(jnp.round(p.neuron.threshold / w_scale))
+    v_next, s = neuron_step_int(vmem, partial, p.neuron, spec, thr_int)
+    return v_next, s.astype(jnp.float32)
+
+
+def spiking_dense(
+    spikes: jax.Array,          # (B, N_in) binary
+    w: jax.Array,               # (N_in, N_out)
+    vmem: jax.Array,            # (B, N_out)
+    p: SpikingDenseParams,
+    spec: QuantSpec,
+    mode: str = "train",
+    matmul: Optional[Callable] = None,
+    w_scale: Optional[jax.Array] = None,
+):
+    """One timestep of a spiking FC layer. Returns (vmem', out_spikes)."""
+    matmul = matmul or _default_matmul
+    if mode == "train":
+        wq = ste_quantize(w, spec.weight_bits)
+        current = matmul(spikes, wq)
+        return neuron_step(vmem, current, p.neuron)
+
+    assert w.dtype == jnp.int8 and w_scale is not None
+    acc = matmul(spikes.astype(jnp.int32), w.astype(jnp.int32))
+    partial = saturate(acc, spec)
+    thr_int = jnp.int32(jnp.round(p.neuron.threshold / w_scale))
+    v_next, s = neuron_step_int(vmem, partial, p.neuron, spec, thr_int)
+    return v_next, s.astype(jnp.float32)
+
+
+def maxpool2d(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """2x2 max-pool (Table II gesture net uses stride-2 maxpool)."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def quantize_layer_weights(w: jax.Array, spec: QuantSpec):
+    """Float weights -> (int8 weights, scalar scale) for the int path."""
+    return quantize(w, spec)

@@ -1,0 +1,235 @@
+"""The paper's two evaluation networks (Table II) as JAX SNNs.
+
+  Optical flow estimation : input 288x384x2, 10 timesteps,
+      Conv(2,32) + 6x Conv(32,32) + Conv(32,2)      (3x3, stride 1, pad 1)
+  Gesture recognition     : input 64x64x2, 20 timesteps,
+      Conv(2,16) + 4x Conv(16,16) + FC(64,11),
+      2x2 stride-2 maxpool after every two intermediate conv layers,
+      adaptive 2x2 pool before the FC so N_in = 16ch * 2 * 2 = 64.
+
+Kernel sizes are not given in the paper; 3x3/stride-1/pad-1 is assumed
+(standard for both reference tasks) — recorded in DESIGN.md §7.  The
+networks are pure functions over a params pytree and scan over timesteps;
+the same definition runs in float-QAT training mode and bit-exact integer
+inference mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    SpikingConvParams,
+    SpikingDenseParams,
+    init_conv,
+    init_dense,
+    maxpool2d,
+    spiking_conv,
+    spiking_dense,
+)
+from .modes import LayerShape
+from .neuron import NeuronConfig
+from .quant import QuantSpec
+
+__all__ = ["SNNSpec", "gesture_net", "optical_flow_net", "init_params", "run_snn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNLayer:
+    kind: str          # "conv" | "fc" | "pool" | "adaptive_pool"
+    c_in: int = 0
+    c_out: int = 0
+    conv: SpikingConvParams | None = None
+    fc: SpikingDenseParams | None = None
+    target_hw: int = 0  # adaptive pool target
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNSpec:
+    name: str
+    input_hw: tuple
+    in_channels: int
+    timesteps: int
+    layers: tuple
+    readout: str  # "rate" (classification) or "vmem" (regression/flow)
+
+    def layer_shapes(self) -> list:
+        """Accelerator-view shapes per weight layer (for modes/energy)."""
+        h, w = self.input_hw
+        out = []
+        for l in self.layers:
+            if l.kind == "conv":
+                p = l.conv
+                h_out = (h + 2 * p.padding - p.kh) // p.stride + 1
+                w_out = (w + 2 * p.padding - p.kw) // p.stride + 1
+                out.append(LayerShape.conv(p.kh, p.kw, l.c_in, l.c_out, h_out, w_out))
+                h, w = h_out, w_out
+            elif l.kind == "fc":
+                out.append(LayerShape.fc(l.c_in, l.c_out))
+            elif l.kind == "pool":
+                h, w = h // 2, w // 2
+            elif l.kind == "adaptive_pool":
+                h = w = l.target_hw
+        return out
+
+
+def _conv(c_in, c_out, neuron=None):
+    return SNNLayer(
+        "conv",
+        c_in,
+        c_out,
+        conv=SpikingConvParams(3, 3, 1, 1, neuron or NeuronConfig()),
+    )
+
+
+def gesture_net(neuron: NeuronConfig | None = None) -> SNNSpec:
+    # Threshold/width tuned for event-camera input sparsity: low threshold +
+    # wide triangle surrogate keeps early layers alive and gradients flowing.
+    n = neuron or NeuronConfig(
+        model="lif", reset="hard", threshold=0.5, leak=0.95, surrogate_width=2.0
+    )
+    return SNNSpec(
+        name="gesture",
+        input_hw=(64, 64),
+        in_channels=2,
+        timesteps=20,
+        layers=(
+            _conv(2, 16, n),
+            _conv(16, 16, n),
+            _conv(16, 16, n),
+            SNNLayer("pool"),
+            _conv(16, 16, n),
+            _conv(16, 16, n),
+            SNNLayer("pool"),
+            SNNLayer("adaptive_pool", target_hw=2),
+            SNNLayer("fc", 64, 11, fc=SpikingDenseParams(n)),
+        ),
+        readout="rate",
+    )
+
+
+def optical_flow_net(neuron: NeuronConfig | None = None) -> SNNSpec:
+    n = neuron or NeuronConfig(
+        model="if", reset="soft", threshold=0.5, surrogate_width=2.0
+    )
+    layers = [_conv(2, 32, n)]
+    layers += [_conv(32, 32, n) for _ in range(6)]
+    layers += [_conv(32, 2, n)]
+    return SNNSpec(
+        name="optical_flow",
+        input_hw=(288, 384),
+        in_channels=2,
+        timesteps=10,
+        layers=tuple(layers),
+        readout="vmem",
+    )
+
+
+def init_params(key: jax.Array, spec: SNNSpec) -> list:
+    params = []
+    for l in spec.layers:
+        if l.kind == "conv":
+            key, k = jax.random.split(key)
+            params.append(init_conv(k, l.conv.kh, l.conv.kw, l.c_in, l.c_out))
+        elif l.kind == "fc":
+            key, k = jax.random.split(key)
+            params.append(init_dense(k, l.c_in, l.c_out))
+        else:
+            params.append(None)
+    return params
+
+
+def _init_state(spec: SNNSpec, batch: int):
+    """Vmem carries for every stateful layer."""
+    h, w = spec.input_hw
+    states = []
+    for l in spec.layers:
+        if l.kind == "conv":
+            p = l.conv
+            h = (h + 2 * p.padding - p.kh) // p.stride + 1
+            w = (w + 2 * p.padding - p.kw) // p.stride + 1
+            states.append(jnp.zeros((batch, h, w, l.c_out)))
+        elif l.kind == "fc":
+            states.append(jnp.zeros((batch, l.c_out)))
+        elif l.kind == "pool":
+            h, w = h // 2, w // 2
+            states.append(None)
+        elif l.kind == "adaptive_pool":
+            h = w = l.target_hw
+            states.append(None)
+    return states
+
+
+def _forward_t(
+    params, state, x_t, spec: SNNSpec, qspec: QuantSpec, mode: str, record_spikes=False
+):
+    """One timestep through all layers. Returns (state', out, spike_counts)."""
+    act = x_t
+    new_state = []
+    spike_counts = []
+    out = None
+    for i, l in enumerate(spec.layers):
+        if l.kind == "conv":
+            v, s = spiking_conv(act, params[i], state[i], l.conv, qspec, mode)
+            new_state.append(v)
+            if record_spikes:
+                spike_counts.append(jnp.sum(s))
+            act, out = s, (v, s)
+        elif l.kind == "fc":
+            flat = act.reshape(act.shape[0], -1)
+            v, s = spiking_dense(flat, params[i], state[i], l.fc, qspec, mode)
+            new_state.append(v)
+            if record_spikes:
+                spike_counts.append(jnp.sum(s))
+            act, out = s, (v, s)
+        elif l.kind == "pool":
+            act = maxpool2d(act)
+            new_state.append(None)
+        elif l.kind == "adaptive_pool":
+            hw = act.shape[1]
+            k = hw // l.target_hw
+            act = maxpool2d(act, window=k, stride=k)
+            new_state.append(None)
+    return new_state, out, spike_counts
+
+
+def run_snn(
+    params,
+    inputs: jax.Array,  # (T, B, H, W, C) binary event frames
+    spec: SNNSpec,
+    qspec: QuantSpec,
+    mode: str = "train",
+    record_spikes: bool = False,
+):
+    """Run all timesteps via lax.scan.
+
+    Returns the readout:
+      * "rate": (B, n_classes) summed output spikes (rate code)
+      * "vmem": (B, H, W, 2) final-layer Vmem (flow regression)
+    plus per-layer total spike counts if ``record_spikes`` (for the
+    sparsity profile of Fig 5 and the energy model).
+    """
+    batch = inputs.shape[1]
+    state0 = _init_state(spec, batch)
+
+    def step(carry, x_t):
+        state, acc = carry
+        state, (v, s), counts = _forward_t(
+            params, state, x_t, spec, qspec, mode, record_spikes
+        )
+        acc = acc + s if spec.readout == "rate" else v
+        counts = jnp.stack(counts) if record_spikes else jnp.zeros((1,))
+        return (state, acc), counts
+
+    n_out = spec.layers[-1].c_out
+    if spec.readout == "rate":
+        acc0 = jnp.zeros((batch, n_out))
+    else:
+        # Flow: Vmem of the last conv layer.
+        h, w = spec.input_hw
+        acc0 = jnp.zeros((batch, h, w, n_out))
+    (state, acc), counts = jax.lax.scan(step, (state0, acc0), inputs)
+    return acc, counts

@@ -1,0 +1,133 @@
+"""Neuron models (paper C8, Sec II-A).
+
+The neuron macro supports integrate-and-fire (IF) and leaky-integrate-and-
+fire (LIF) models, each with *soft* or *hard* reset:
+
+  hard reset : V <- 0            after a spike
+  soft reset : V <- V - theta    after a spike (residual potential kept)
+
+Neuron parameters (threshold, leak) live in reserved rows of the neuron
+macro; here they are per-layer arrays.  Two execution modes are provided:
+
+  * integer mode  — bit-exact with the digital neuron macro: Vmem is a
+    (2W-1)-bit signed integer, leak is a right-shift (digital LIF), the
+    threshold compare + conditional-write reset mirrors the augmented
+    Store stage.
+  * float mode    — used for surrogate-gradient training (QAT handles the
+    precision; dynamics in float for stable gradients).
+
+``spike_surrogate`` is the custom-vjp Heaviside with a triangle surrogate
+derivative, shared by both modes so the integer forward pass can still be
+trained through if desired.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .quant import QuantSpec, saturate
+
+__all__ = ["NeuronConfig", "if_step", "lif_step", "neuron_step", "spike_surrogate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronConfig:
+    model: Literal["if", "lif"] = "if"
+    reset: Literal["hard", "soft"] = "hard"
+    threshold: float = 1.0
+    # LIF leak: float mode multiplies by ``leak``; integer mode right-shifts by
+    # ``leak_shift`` (V <- V - (V >> leak_shift)), the standard digital LIF.
+    leak: float = 0.9
+    leak_shift: int = 3
+    surrogate_width: float = 1.0
+
+    def __post_init__(self):
+        assert self.model in ("if", "lif")
+        assert self.reset in ("hard", "soft")
+
+
+# --------------------------------------------------------------------------
+# Surrogate-gradient spike function (triangle / piecewise-linear surrogate).
+# --------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike_surrogate(v: jax.Array, threshold: jax.Array, width: float = 1.0):
+    return (v >= threshold).astype(v.dtype)
+
+
+def _spike_fwd(v, threshold, width):
+    return spike_surrogate(v, threshold, width), (v, threshold)
+
+
+def _spike_bwd(width, res, g):
+    v, threshold = res
+    x = (v - threshold) / width
+    surr = jnp.maximum(0.0, 1.0 - jnp.abs(x)) / width
+    dv = g * surr
+    return dv, -jnp.sum(dv) if jnp.ndim(threshold) == 0 else -dv
+
+
+spike_surrogate.defvjp(_spike_fwd, _spike_bwd)
+
+
+# --------------------------------------------------------------------------
+# Float-mode dynamics (training path).
+# --------------------------------------------------------------------------
+def neuron_step(v: jax.Array, current: jax.Array, cfg: NeuronConfig):
+    """One timestep of the neuron macro in float mode.
+
+    Returns ``(v_next, spikes)``.  Order matches the macro: partial->full
+    Vmem accumulation, (leak), threshold compare, conditional-write reset.
+    """
+    if cfg.model == "lif":
+        v = v * cfg.leak
+    v = v + current
+    s = spike_surrogate(v, jnp.asarray(cfg.threshold, v.dtype), cfg.surrogate_width)
+    if cfg.reset == "hard":
+        v_next = v * (1.0 - s)
+    else:  # soft
+        v_next = v - s * cfg.threshold
+    return v_next, s
+
+
+def if_step(v, current, cfg: NeuronConfig | None = None):
+    cfg = cfg or NeuronConfig(model="if")
+    return neuron_step(v, current, cfg)
+
+
+def lif_step(v, current, cfg: NeuronConfig | None = None):
+    cfg = cfg or NeuronConfig(model="lif")
+    return neuron_step(v, current, cfg)
+
+
+# --------------------------------------------------------------------------
+# Integer-mode dynamics (bit-exact with the neuron macro datapath).
+# --------------------------------------------------------------------------
+def neuron_step_int(
+    v: jax.Array,
+    partial_vmem: jax.Array,
+    cfg: NeuronConfig,
+    spec: QuantSpec,
+    threshold_int: int,
+):
+    """Bit-exact neuron macro step.
+
+    ``v`` and ``partial_vmem`` are int32 holding (2W-1)-bit values.  The
+    macro performs: full += partial (saturating), optional leak shift,
+    compare against the integer threshold stored in the reserved parameter
+    rows, then the conditional-write reset in the Store stage.
+    """
+    v = v.astype(jnp.int32)
+    if cfg.model == "lif":
+        # Digital leak: V <- V - (V >> k). Arithmetic shift keeps sign.
+        v = v - (v >> cfg.leak_shift)
+    v = saturate(v + partial_vmem.astype(jnp.int32), spec)
+    s = (v >= threshold_int).astype(jnp.int32)
+    if cfg.reset == "hard":
+        v_next = v * (1 - s)
+    else:
+        v_next = saturate(v - s * threshold_int, spec)
+    return v_next, s

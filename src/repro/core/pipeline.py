@@ -1,0 +1,116 @@
+"""Timestep pipelining with asynchronous handshaking (paper C7, Sec II-F, Fig 13).
+
+Compute units have data-dependent execution times (spike-count dependent);
+neuron units are fixed at 66 cycles (Eq. 3).  A rigid synchronous pipeline
+would have to assume worst-case sparsity; SpiDR instead uses asynchronous
+handshaking so each unit starts as soon as its operands arrive and stalls
+only on true data dependences.
+
+This is a discrete-event simulator of that handshake for a chain of
+``n_cm`` compute macros feeding one neuron macro (Mode 2), or three
+independent 3-CM chains (Mode 1).  Per timestep t and macro i:
+
+  ready[i][t]   = finish of CM i's compute for t
+  CM i's compute for t may start when:
+    - CM i has finished its own compute for t-1           (resource)
+    - CM i-1 has delivered its partial Vmem for t         (data, chained)
+  The delivery costs ``transfer_cycles`` on BOTH sides (the SRAM port is
+  busy), matching the Wait/Transfer slots of Fig 13.
+
+Outputs: per-timestep latency, makespan, utilization per unit, and the
+synchronous-worst-case makespan for comparison (the paper's motivation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cim_macro import NEURON_MACRO_CYCLES
+
+__all__ = ["PipelineConfig", "PipelineResult", "simulate_pipeline"]
+
+# Per-timestep fixed costs (cycles), derived in DESIGN.md from Table I:
+# reset of partial Vmems + partial-Vmem transfer between units.
+RESET_CYCLES = 32          # reset 32 partial Vmem rows
+TRANSFER_CYCLES = 64       # move 32 Vmem rows between adjacent macros
+PIPE_FILL = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_cm: int = 9                 # chained compute macros (mode 2) or 3 (mode 1)
+    neuron_cycles: int = NEURON_MACRO_CYCLES
+    transfer_cycles: int = TRANSFER_CYCLES
+    reset_cycles: int = RESET_CYCLES
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    makespan: int                  # total cycles for all timesteps
+    sync_makespan: int             # rigid worst-case-synchronous pipeline
+    cm_busy: np.ndarray            # (n_cm,) busy cycles per compute macro
+    nu_busy: int
+    per_timestep_finish: np.ndarray
+
+    @property
+    def speedup_vs_sync(self) -> float:
+        return self.sync_makespan / max(self.makespan, 1)
+
+    @property
+    def cm_utilization(self) -> np.ndarray:
+        return self.cm_busy / max(self.makespan, 1)
+
+
+def simulate_pipeline(
+    compute_cycles: np.ndarray,  # (timesteps, n_cm) data-dependent CM cycles
+    cfg: PipelineConfig | None = None,
+) -> PipelineResult:
+    """Simulate Fig 13's handshake for ``timesteps`` over a CM chain + NU."""
+    cfg = cfg or PipelineConfig()
+    T, n_cm = compute_cycles.shape
+    assert n_cm == cfg.n_cm, (n_cm, cfg.n_cm)
+
+    # finish[i] = time CM i finished its current timestep's compute+send.
+    cm_free = np.zeros(n_cm, dtype=np.int64)    # when the unit is next free
+    recv_ready = np.zeros(n_cm, dtype=np.int64)  # when upstream partials arrive
+    nu_free = 0
+    cm_busy = np.zeros(n_cm, dtype=np.int64)
+    nu_busy = 0
+    finish_t = np.zeros(T, dtype=np.int64)
+
+    for t in range(T):
+        upstream_done = 0
+        for i in range(n_cm):
+            # Start: unit free AND (for chained macros) upstream partials here.
+            start = max(cm_free[i], recv_ready[i])
+            work = cfg.reset_cycles + int(compute_cycles[t, i]) + PIPE_FILL
+            end_compute = start + work
+            # Handshake: transfer occupies both sender (i) and receiver (i+1).
+            send_start = max(end_compute, upstream_done)
+            end_send = send_start + cfg.transfer_cycles
+            cm_busy[i] += work + cfg.transfer_cycles
+            cm_free[i] = end_send
+            if i + 1 < n_cm:
+                recv_ready[i + 1] = end_send
+            upstream_done = end_send
+        # Neuron macro consumes the chain's final partials.
+        nu_start = max(nu_free, upstream_done)
+        nu_end = nu_start + cfg.neuron_cycles
+        nu_busy += cfg.neuron_cycles
+        nu_free = nu_end
+        finish_t[t] = nu_end
+
+    # Rigid synchronous alternative: every stage takes the worst case of the
+    # whole run; stages advance in lockstep (the design the paper avoids).
+    worst = int(compute_cycles.max()) + cfg.reset_cycles + PIPE_FILL
+    stage = worst + cfg.transfer_cycles
+    sync_makespan = (n_cm + T - 1) * stage + cfg.neuron_cycles * T
+
+    return PipelineResult(
+        makespan=int(finish_t[-1]),
+        sync_makespan=int(sync_makespan),
+        cm_busy=cm_busy,
+        nu_busy=int(nu_busy),
+        per_timestep_finish=finish_t,
+    )

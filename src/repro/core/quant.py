@@ -1,0 +1,149 @@
+"""Reconfigurable weight/Vmem bit-precision support (paper C2, Sec II-A).
+
+SpiDR supports three weight/Vmem precision pairs — 4/7, 6/11 and 8/15 bit —
+selected as a configuration parameter before execution.  The invariant is
+
+    B_Vmem = 2 * B_weight - 1
+
+Weights are signed two's-complement integers stored in the macro's weight
+rows; membrane potentials are signed integers twice as wide (minus one bit)
+stored staggered across two Vmem rows.  Because the design is *digital* CIM
+there is no analog non-ideality: integer arithmetic in JAX is bit-exact with
+the silicon datapath.
+
+This module provides:
+  * ``QuantSpec``       — the precision configuration object.
+  * ``quantize`` / ``dequantize`` — symmetric per-tensor / per-channel
+    weight quantization used both by the functional SNN layers and by the
+    LM serving path (``kernels/quant_matmul``).
+  * ``sat_add``         — saturating add at Vmem precision (the column
+    peripheral adder chain saturates rather than wrapping; see
+    ``cim_macro.py`` for the exact per-op ordering).
+  * ``ste_quantize``    — straight-through estimator for QAT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec",
+    "SUPPORTED_PRECISIONS",
+    "quantize",
+    "dequantize",
+    "sat_add",
+    "saturate",
+    "ste_quantize",
+    "fake_quant",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Weight/Vmem precision pair. ``vmem_bits = 2*weight_bits - 1``."""
+
+    weight_bits: int
+
+    def __post_init__(self):
+        if self.weight_bits not in (4, 6, 8):
+            raise ValueError(
+                f"SpiDR supports 4/6/8-bit weights, got {self.weight_bits}"
+            )
+
+    @property
+    def vmem_bits(self) -> int:
+        return 2 * self.weight_bits - 1
+
+    # Signed two's complement ranges -------------------------------------
+    @property
+    def w_min(self) -> int:
+        return -(1 << (self.weight_bits - 1))
+
+    @property
+    def w_max(self) -> int:
+        return (1 << (self.weight_bits - 1)) - 1
+
+    @property
+    def v_min(self) -> int:
+        return -(1 << (self.vmem_bits - 1))
+
+    @property
+    def v_max(self) -> int:
+        return (1 << (self.vmem_bits - 1)) - 1
+
+    # Macro geometry hooks (Sec II-E, Eq. 1) ------------------------------
+    @property
+    def neurons_per_row(self) -> int:
+        """48-column SRAM array packs 48/W_b weights per row."""
+        return 48 // self.weight_bits
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"QuantSpec({self.weight_bits}/{self.vmem_bits}b)"
+
+
+SUPPORTED_PRECISIONS = tuple(QuantSpec(b) for b in (4, 6, 8))
+
+
+def _scale_for(w: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=axis is not None)
+    # Avoid div-by-zero for all-zero channels.
+    amax = jnp.where(amax == 0, 1.0, amax)
+    return amax / spec.w_max
+
+
+def quantize(w: jax.Array, spec: QuantSpec, axis=None):
+    """Symmetric quantization of float weights to signed ints.
+
+    Returns ``(q, scale)`` with ``q`` int8 (covers up to 8-bit precision)
+    and ``w ≈ q * scale``.  ``axis`` selects per-channel scales.
+    """
+    scale = _scale_for(w, spec, axis)
+    q = jnp.clip(jnp.round(w / scale), spec.w_min, spec.w_max)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def saturate(v: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Clamp to the Vmem representable range (column adder saturation)."""
+    return jnp.clip(v, spec.v_min, spec.v_max)
+
+
+def sat_add(v: jax.Array, w: jax.Array, spec: QuantSpec) -> jax.Array:
+    """One weight→Vmem accumulation at Vmem precision.
+
+    Matches the peripheral adder: the sum is computed at full width and
+    saturated into the (2W-1)-bit Vmem field before the Store stage.
+    """
+    return saturate(v.astype(jnp.int32) + w.astype(jnp.int32), spec)
+
+
+# --------------------------------------------------------------------------
+# QAT: straight-through estimator.  Forward = fake-quantized weights,
+# backward = identity.  This is what lets us train the paper's two networks
+# at 4/6/8-bit and reproduce the Fig 16 accuracy/energy trade-off.
+# --------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quantize(w: jax.Array, weight_bits: int) -> jax.Array:
+    spec = QuantSpec(weight_bits)
+    q, scale = quantize(w, spec)
+    return dequantize(q, scale)
+
+
+def _ste_fwd(w, weight_bits):
+    return ste_quantize(w, weight_bits), None
+
+
+def _ste_bwd(weight_bits, _res, g):
+    return (g,)
+
+
+ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+# Alias used by the LM serving path.
+fake_quant = ste_quantize

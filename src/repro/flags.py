@@ -1,0 +1,55 @@
+"""Performance-variant flags (EXPERIMENTS.md §Perf).
+
+Each flag is one hillclimb lever; the dry-run's ``--variant`` composes them
+so every hypothesis->change->measure cycle is reproducible:
+
+  base            paper-faithful baseline (all off)
+  remat_saveout   activation-checkpoint policy saves the POST-collective
+                  block output, so backward recompute does not re-issue the
+                  forward TP all-reduces
+  seqpar          Megatron-style sequence parallelism: the residual stream
+                  between blocks is sequence-sharded over 'model'
+  dp_only         no tensor parallelism: params FSDP over (data x model),
+                  batch over every axis — for models too small to TP
+  opt             remat_saveout + seqpar (the shipping configuration)
+"""
+from __future__ import annotations
+
+FLAGS = {
+    "remat_saveout": False,
+    "sequence_parallel": False,
+    "dp_only": False,
+    "serve_tp": False,
+    "bf16_params": False,
+    "serve_bf16_weights": False,
+}
+
+VARIANTS = {
+    "base": {},
+    "remat_saveout": {"remat_saveout": True},
+    "seqpar": {"sequence_parallel": True},
+    "remat_seqpar": {"remat_saveout": True, "sequence_parallel": True},
+    "dp_only": {"dp_only": True},
+    "dp_only_remat": {"dp_only": True, "remat_saveout": True},
+    "serve_tp": {"serve_tp": True},
+    "bf16": {"bf16_params": True},
+    "bf16_seqpar": {"bf16_params": True, "sequence_parallel": True, "remat_saveout": True},
+    "dp_only_bf16": {"dp_only": True, "bf16_params": True},
+    "dp_only_bf16_remat": {"dp_only": True, "bf16_params": True, "remat_saveout": True},
+    "serve_tp_bf16": {"serve_tp": True, "bf16_params": True},
+    "serve_opt": {"serve_tp": True, "serve_bf16_weights": True},
+    "opt": {"remat_saveout": True, "sequence_parallel": True},
+    # resolved per-cell by launch.dryrun.resolve_auto
+    "auto": {},
+}
+
+
+def set_variant(name: str):
+    for k in FLAGS:
+        FLAGS[k] = False
+    for k, v in VARIANTS[name].items():
+        FLAGS[k] = v
+
+
+def flag(name: str) -> bool:
+    return FLAGS[name]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused neuron-macro update (paper C8 / Eq. 3).
+
+Fuses the neuron macro's whole per-timestep sequence — partial->full Vmem
+accumulation, optional leak, threshold compare, and the conditional-write
+soft/hard reset — into one elementwise VPU pass over VMEM-resident tiles.
+On the silicon this is the fixed 66-cycle neuron-macro program; on TPU the
+fusion saves three HBM round-trips vs composing the ops.
+
+Float variant (training/serving) and integer variant (bit-exact with the
+digital macro: int32 Vmem saturated to the (2W-1)-bit range, shift-based
+leak) share the kernel body structure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lif_step_fused", "lif_step_fused_int"]
+
+_BLOCK = (256, 256)
+
+
+def _lif_kernel_f32(v_ref, i_ref, o_v_ref, o_s_ref, *, threshold, leak, soft_reset):
+    v = v_ref[...]
+    if leak != 1.0:
+        v = v * leak
+    v = v + i_ref[...]
+    s = (v >= threshold).astype(v.dtype)
+    if soft_reset:
+        v_next = v - s * threshold
+    else:
+        v_next = v * (1.0 - s)
+    o_v_ref[...] = v_next
+    o_s_ref[...] = s
+
+
+def _lif_kernel_int(
+    v_ref, i_ref, o_v_ref, o_s_ref, *, threshold, leak_shift, soft_reset, v_min, v_max
+):
+    v = v_ref[...]
+    if leak_shift > 0:
+        v = v - (v >> leak_shift)
+    v = jnp.clip(v + i_ref[...], v_min, v_max)
+    s = (v >= threshold).astype(jnp.int32)
+    if soft_reset:
+        v_next = jnp.clip(v - s * threshold, v_min, v_max)
+    else:
+        v_next = v * (1 - s)
+    o_v_ref[...] = v_next
+    o_s_ref[...] = s
+
+
+def _tiled_call(kernel, v, i, out_dtypes, interpret):
+    """Run an elementwise 2-output kernel over a 2D-tiled view of v/i."""
+    orig_shape = v.shape
+    flat = v.reshape(-1)
+    n = flat.shape[0]
+    bm, bn = _BLOCK
+    cols = bn
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    v2 = jnp.pad(v.reshape(-1), (0, pad)).reshape(rows, cols)
+    i2 = jnp.pad(i.reshape(-1), (0, pad)).reshape(rows, cols)
+    pad_r = -rows % bm
+    v2 = jnp.pad(v2, ((0, pad_r), (0, 0)))
+    i2 = jnp.pad(i2, ((0, pad_r), (0, 0)))
+    grid = (v2.shape[0] // bm,)
+
+    v_out, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, cols), lambda r: (r, 0)),
+            pl.BlockSpec((bm, cols), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, cols), lambda r: (r, 0)),
+            pl.BlockSpec((bm, cols), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v2.shape, out_dtypes[0]),
+            jax.ShapeDtypeStruct(v2.shape, out_dtypes[1]),
+        ],
+        interpret=interpret,
+    )(v2, i2)
+    v_out = v_out.reshape(-1)[:n].reshape(orig_shape)
+    s_out = s_out.reshape(-1)[:n].reshape(orig_shape)
+    return v_out, s_out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "leak", "soft_reset", "interpret")
+)
+def lif_step_fused(
+    v: jax.Array,
+    current: jax.Array,
+    threshold: float = 1.0,
+    leak: float = 1.0,
+    soft_reset: bool = False,
+    interpret: bool = False,
+):
+    """Float fused neuron step. leak=1.0 -> IF; leak<1 -> LIF."""
+    kernel = functools.partial(
+        _lif_kernel_f32, threshold=threshold, leak=leak, soft_reset=soft_reset
+    )
+    return _tiled_call(kernel, v, current, (v.dtype, v.dtype), interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("threshold", "leak_shift", "soft_reset", "vmem_bits", "interpret"),
+)
+def lif_step_fused_int(
+    v: jax.Array,
+    partial_vmem: jax.Array,
+    threshold: int,
+    leak_shift: int = 0,
+    soft_reset: bool = False,
+    vmem_bits: int = 7,
+    interpret: bool = False,
+):
+    """Integer fused neuron step, bit-exact with neuron_step_int."""
+    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
+    kernel = functools.partial(
+        _lif_kernel_int,
+        threshold=threshold,
+        leak_shift=leak_shift,
+        soft_reset=soft_reset,
+        v_min=v_min,
+        v_max=v_max,
+    )
+    return _tiled_call(
+        kernel, v.astype(jnp.int32), partial_vmem.astype(jnp.int32),
+        (jnp.int32, jnp.int32), interpret,
+    )

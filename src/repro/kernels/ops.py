@@ -1,0 +1,66 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On a CPU host (this container) the kernels execute in interpret mode; on a
+real TPU they compile to Mosaic.  ``on_tpu()`` picks automatically, and the
+layers/models call these wrappers so the backend choice is transparent.
+"""
+from __future__ import annotations
+
+import jax
+
+from .lif_step import lif_step_fused, lif_step_fused_int
+from .quant_matmul import pack_int4, quant_matmul, unpack_int4  # noqa: F401
+from .spike_gemm import spike_gemm
+from .wkv_chunk import wkv_chunk, wkv_sequence  # noqa: F401
+
+__all__ = [
+    "on_tpu",
+    "spike_gemm_op",
+    "lif_step_op",
+    "lif_step_int_op",
+    "quant_matmul_op",
+    "pack_int4",
+    "unpack_int4",
+    "wkv_sequence_op",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def spike_gemm_op(spikes, weights, block=(128, 128, 128), skip_empty=True):
+    return spike_gemm(
+        spikes, weights, block=block, interpret=_interpret(), skip_empty=skip_empty
+    )
+
+
+def lif_step_op(v, current, threshold=1.0, leak=1.0, soft_reset=False):
+    return lif_step_fused(
+        v, current, threshold=threshold, leak=leak, soft_reset=soft_reset,
+        interpret=_interpret(),
+    )
+
+
+def lif_step_int_op(v, partial, threshold, leak_shift=0, soft_reset=False, vmem_bits=7):
+    return lif_step_fused_int(
+        v, partial, threshold, leak_shift=leak_shift, soft_reset=soft_reset,
+        vmem_bits=vmem_bits, interpret=_interpret(),
+    )
+
+
+def quant_matmul_op(x, w_q, scale, bits=8, block=(128, 128, 256)):
+    return quant_matmul(x, w_q, scale, bits=bits, block=block, interpret=_interpret())
+
+
+def wkv_sequence_op(r, k, v, lw, u, s0, chunk=32):
+    """RWKV6 wkv over a sequence via the Pallas chunk kernel.
+
+    The jnp reference for this kernel is models.rwkv6._wkv_chunked (used as
+    the default path and as the test oracle).
+    """
+    return wkv_sequence(r, k, v, lw, u, s0, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: low-precision-weight matmul with in-kernel dequant.
+
+The LM-side realization of SpiDR's C2 (reconfigurable weight precision with
+wide accumulators): weights are stored in HBM at 4 or 8 bits and dequantized
+*inside* the kernel after the VMEM DMA, so HBM traffic shrinks by 4x/2x vs
+bf16 — exactly the B_Vmem=2B_w-1 trade the macro makes, transplanted to the
+TPU memory hierarchy (HBM->VMEM is the analogue of SRAM row reads).
+
+int4 weights are packed two-per-byte along K (even rows in the low nibble,
+odd rows in the high nibble — the macro's even/odd column interleave).
+Per-output-channel float scales follow the standard w4a16/w8a16 recipe.
+
+  x (M, K) f32/bf16  x  w_packed (K(/2), N) int8  * scale (N,)  -> (M, N) f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["quant_matmul", "pack_int4", "unpack_int4"]
+
+_BLOCK = (128, 128, 256)  # (bm, bn, bk) — bk counts UNPACKED rows
+
+
+def pack_int4(w_int: jax.Array) -> jax.Array:
+    """(K, N) int in [-8, 7] -> (K//2, N) uint8, even row low nibble."""
+    assert w_int.shape[0] % 2 == 0, "K must be even to pack int4"
+    lo = (w_int[0::2] & 0xF).astype(jnp.uint8)
+    hi = (w_int[1::2] & 0xF).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_int4 -> (K, N) int8 (sign-extended)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2, n = packed.shape
+    out = jnp.zeros((k2 * 2, n), jnp.int8)
+    out = out.at[0::2].set(lo)
+    return out.at[1::2].set(hi)
+
+
+def _qmm_kernel_int8(x_ref, w_ref, s_ref, o_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Scale is per output channel; applying it per k-partial is exact.
+    o_ref[...] += acc * s_ref[...]
+    del n_k
+
+
+def _qmm_kernel_int4(x_ref, w_ref, s_ref, o_ref, *, n_k):
+    """w_ref block is (bk//2, bn) packed; unpack in VMEM then dot."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    packed = w_ref[...]
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo).astype(jnp.float32)
+    hi = jnp.where(hi >= 8, hi - 16, hi).astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)
+    x_even = x[:, 0::2]  # multiplies low-nibble (even K) rows
+    x_odd = x[:, 1::2]
+    acc = jax.lax.dot_general(
+        x_even, lo, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(
+        x_odd, hi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc * s_ref[...]
+    del n_k
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def quant_matmul(
+    x: jax.Array,        # (M, K) float
+    w_q: jax.Array,      # int8: (K, N) for bits=8, (K//2, N) packed for bits=4
+    scale: jax.Array,    # (N,) per-channel
+    bits: int = 8,
+    block: tuple = _BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    assert bits in (4, 8)
+    m, k = x.shape
+    n = w_q.shape[1]
+    bm, bn, bk = block
+    if bits == 4:
+        assert w_q.shape[0] * 2 == k, (w_q.shape, k)
+        assert bk % 2 == 0
+
+    pad_m, pad_n, pad_k = -m % bm, -n % bn, -k % bk
+    x_p = jnp.pad(x, ((0, pad_m), (0, pad_k))).astype(jnp.float32)
+    if bits == 8:
+        w_p = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+        w_block = (bk, bn)
+    else:
+        w_p = jnp.pad(w_q, ((0, pad_k // 2), (0, pad_n)))
+        w_block = (bk // 2, bn)
+    s_p = jnp.pad(scale.astype(jnp.float32), (0, pad_n)).reshape(1, -1)
+
+    gm, gn, gk = x_p.shape[0] // bm, w_p.shape[1] // bn, x_p.shape[1] // bk
+    kernel = functools.partial(
+        _qmm_kernel_int8 if bits == 8 else _qmm_kernel_int4, n_k=gk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec(w_block, lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x_p.shape[0], w_p.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(x_p, w_p, s_p)
+    return out[:m, :n]

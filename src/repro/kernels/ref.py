@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` matches its kernel's contract exactly; tests sweep shapes,
+dtypes and sparsity levels asserting allclose/array_equal between kernel
+(interpret=True on CPU) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spike_gemm_ref", "lif_step_ref", "lif_step_int_ref", "quant_matmul_ref"]
+
+
+def spike_gemm_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
+    """int32 spikes @ weights."""
+    return jnp.dot(
+        spikes.astype(jnp.int32),
+        weights.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def lif_step_ref(v, current, threshold=1.0, leak=1.0, soft_reset=False):
+    if leak != 1.0:
+        v = v * leak
+    v = v + current
+    s = (v >= threshold).astype(v.dtype)
+    v_next = v - s * threshold if soft_reset else v * (1.0 - s)
+    return v_next, s
+
+
+def lif_step_int_ref(v, partial, threshold, leak_shift=0, soft_reset=False, vmem_bits=7):
+    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
+    v = v.astype(jnp.int32)
+    if leak_shift > 0:
+        v = v - (v >> leak_shift)
+    v = jnp.clip(v + partial.astype(jnp.int32), v_min, v_max)
+    s = (v >= threshold).astype(jnp.int32)
+    v_next = jnp.clip(v - s * threshold, v_min, v_max) if soft_reset else v * (1 - s)
+    return v_next, s
+
+
+def quant_matmul_ref(x, w_q, scale, bits=8):
+    from .quant_matmul import unpack_int4
+
+    w = unpack_int4(w_q) if bits == 4 else w_q
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) * scale[None, :]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: one RWKV6 wkv chunk step (paper C1 on the LM side).
+
+The wkv state S (N x N per head) is this framework's clearest Vmem
+analogue (DESIGN.md §4): a stationary accumulator held in fast memory
+while token "events" stream through.  This kernel computes one chunk of
+the chunked linear-attention form for EVERY (batch, head) in the grid:
+
+    lw_incl = cumsum(lw)                                  (C, N)
+    y       = (r * e^{lw_excl}) @ S0                      inter-chunk
+            + [(r_i k_j e^{lw_excl_i - lw_incl_j})_{j<i}] v   intra
+            + (sum_n r u k) * v                           bonus diag
+    S1      = e^{lw_incl_C} * S0 + (k * e^{lw_incl_C - lw_incl})^T v
+
+Per-program working set at C=32, N=64: 5 x (C,N) + 2 x (N,N) f32
+= 73 KB — comfortably VMEM-resident, with the (C,C,N) decay-ratio
+tensor (256 KB) materialized on the fly.  The MXU sees three (C,N)x(N,N)
+/ (C,C)x(C,N) contractions per chunk; HBM traffic is exactly one read of
+the chunk operands and one state read/write — the weight/Vmem co-location
+story, transplanted.
+
+Grid: (B*H,). The host-side wrapper scans chunks, carrying S — on TPU the
+scan pipelines the next chunk's DMA against the current compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wkv_chunk", "wkv_sequence"]
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, s1_ref):
+    r = r_ref[0]        # (C, N)
+    k = k_ref[0]
+    v = v_ref[0]
+    lw = lw_ref[0]
+    u = u_ref[0]        # (1, N) block
+    s0 = s0_ref[0]      # (N, N)
+
+    c = r.shape[0]
+    lw_incl = jnp.cumsum(lw, axis=0)
+    lw_excl = lw_incl - lw
+
+    # inter-chunk: (C,N) @ (N,N)
+    y = jax.lax.dot_general(
+        r * jnp.exp(lw_excl), s0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # intra-chunk: A_ij = sum_n r_i k_j e^{lw_excl_i - lw_incl_j}, j < i
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    strict = (iota_j < iota_i)[:, :, None]
+    ratio = jnp.where(
+        strict, jnp.exp(lw_excl[:, None, :] - lw_incl[None, :, :]), 0.0
+    )  # (C, C, N), exponents <= 0
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * ratio, axis=-1)  # (C, C)
+    y = y + jax.lax.dot_general(
+        a, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # diagonal bonus: y_i += (sum_n r_i u k_i) v_i
+    diag = jnp.sum(r * u * k, axis=-1, keepdims=True)
+    y = y + diag * v
+
+    # state update
+    decay_all = jnp.exp(lw_incl[-1:, :])                 # (1, N)
+    k_scaled = k * jnp.exp(lw_incl[-1:, :] - lw_incl)    # (C, N)
+    s1 = s0 * decay_all.T + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    y_ref[0] = y
+    s1_ref[0] = s1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_chunk(r, k, v, lw, u, s0, interpret: bool = False):
+    """One chunk for all heads.
+
+    r/k/v/lw: (BH, C, N) f32; u: (BH, 1, N); s0: (BH, N, N).
+    Returns (y (BH, C, N), s1 (BH, N, N)).
+    """
+    bh, c, n = r.shape
+    spec_cn = pl.BlockSpec((1, c, n), lambda i: (i, 0, 0))
+    spec_nn = pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))
+    spec_u = pl.BlockSpec((1, 1, n), lambda i: (i, 0, 0))
+    y, s1 = pl.pallas_call(
+        _wkv_kernel,
+        grid=(bh,),
+        in_specs=[spec_cn, spec_cn, spec_cn, spec_cn, spec_u, spec_nn],
+        out_specs=[spec_cn, spec_nn],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, c, n), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return y, s1
+
+
+def wkv_sequence(r, k, v, lw, u, s0, chunk: int = 32, interpret: bool = False):
+    """Full sequence via scan-of-chunks. Shapes as rwkv6._wkv_chunked:
+
+    r/k/v/lw: (B, S, H, N); u: (H, N); s0: (B, H, N, N).
+    """
+    b, s, h, n = r.shape
+    nc = s // chunk
+    assert s % chunk == 0
+
+    def to_bh(x):
+        # (B,S,H,N) -> (nc, B*H, C, N)
+        x = x.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+        return x.reshape(nc, b * h, chunk, n)
+
+    rc, kc, vc, lwc = map(to_bh, (r, k, v, lw))
+    u_bh = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, 1, n)
+    s = s0.reshape(b * h, n, n)
+
+    def body(carry, inp):
+        rb, kb, vb, lwb = inp
+        y, s1 = wkv_chunk(rb, kb, vb, lwb, u_bh, carry, interpret=interpret)
+        return s1, y
+
+    s_f, ys = jax.lax.scan(body, s, (rc, kc, vc, lwc))
+    y = ys.reshape(nc, b, h, chunk, n).transpose(1, 0, 3, 2, 4)
+    return y.reshape(b, nc * chunk, h, n), s_f.reshape(b, h, n, n)

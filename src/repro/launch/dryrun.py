@@ -1,0 +1,266 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first two lines (before any jax-importing module) so the
+512 placeholder host devices exist before jax locks the device count:
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import flags as perf_flags                                        # noqa: E402
+from repro.configs.base import SHAPES, get_config, input_specs, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh                          # noqa: E402
+from repro.models import model as M                                         # noqa: E402
+from repro import sharding as S                                             # noqa: E402
+from repro.roofline.analysis import analyze_compiled                        # noqa: E402
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _cell_id(arch: str, shape: str, multi_pod: bool) -> str:
+    return f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+
+
+def build_lowerable(arch: str, shape_name: str, multi_pod: bool, variant: str = "base"):
+    """Returns (fn, args_abstract, in_shardings, out_shardings, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape):
+        raise ValueError(f"skip: {cfg.skip_reason(shape)}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params_abs = M.abstract_params(cfg)
+    if perf_flags.flag("serve_bf16_weights") and shape.kind != "train":
+        # Serving from a bf16 checkpoint: no fp32 masters at inference.
+        params_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+            if a.dtype == jnp.float32 and len(a.shape) >= 2 else a,
+            params_abs,
+        )
+    p_specs = S.validate_tree(S.param_specs(params_abs), params_abs, mesh)
+    batch_abs = input_specs(cfg, shape)
+    b_specs = S.validate_tree(S.batch_specs(batch_abs, multi_pod), batch_abs, mesh)
+
+    if shape.kind == "train":
+        opt_abs = M.abstract_opt_state(params_abs)
+        o_specs = {"mu": p_specs, "nu": p_specs}
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = M.make_train_step(cfg)
+        args = (params_abs, opt_abs, step_abs, batch_abs)
+        in_sh = (p_specs, o_specs, None, b_specs)
+        out_sh = (p_specs, o_specs, None)
+        meta = {"kind": "train"}
+    elif shape.kind == "prefill":
+        fn = M.make_prefill_step(cfg)
+        args = (params_abs, batch_abs)
+        in_sh = (p_specs, b_specs)
+        # The prefill cache structure differs from the decode cache (no
+        # 'len' counter) — derive specs from the actual output structure.
+        logits_abs, cache_abs = jax.eval_shape(fn, params_abs, batch_abs)
+        c_specs = S.validate_tree(
+            S.decode_cache_specs(cache_abs, multi_pod, shape.global_batch),
+            cache_abs, mesh,
+        )
+        l_spec = S.validate_spec(
+            S.logits_spec(multi_pod, shape.global_batch), logits_abs.shape, mesh
+        )
+        out_sh = (l_spec, c_specs)
+        meta = {"kind": "prefill"}
+    else:  # decode
+        cache_abs = M.abstract_decode_cache(cfg, shape.global_batch, shape.seq_len)
+        c_specs = S.validate_tree(
+            S.decode_cache_specs(cache_abs, multi_pod, shape.global_batch),
+            cache_abs, mesh,
+        )
+        fn = M.make_decode_step(cfg)
+        args = (params_abs, cache_abs, batch_abs)
+        in_sh = (p_specs, c_specs, b_specs)
+        l_spec = S.validate_spec(
+            S.logits_spec(multi_pod, shape.global_batch),
+            (shape.global_batch, cfg.padded_vocab), mesh,
+        )
+        out_sh = (l_spec, c_specs)
+        meta = {"kind": "decode"}
+    meta.update(
+        {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        }
+    )
+    return fn, args, in_sh, out_sh, meta
+
+
+def resolve_auto(shape, multi_pod: bool) -> str:
+    """Per-cell optimal policy from the EXPERIMENTS.md §Perf iterations:
+
+      train/prefill, batch divisible by ALL mesh axes -> dp_only_bf16
+        (no TP: collective drops 14-24x; confirmed on qwen1.5/chameleon)
+      train/prefill otherwise -> bf16 wire only (TP retained; dp_only with
+        batch < mesh size replicates activations — refuted on rwkv6 pod1
+        and chameleon pod2)
+      decode -> serve_opt (TP-only bf16 weights: no per-token param
+        all-gathers; confirmed 70x on chameleon decode)
+    """
+    n_devices = 512 if multi_pod else 256
+    if shape.kind == "decode":
+        return "serve_opt"
+    if shape.global_batch % n_devices == 0:
+        return "dp_only_bf16"
+    if shape.kind == "train":
+        # TP retained; sequence parallelism is the memory lever that makes
+        # batch-nondivisible train cells FIT 16 GiB (41->13.6 GiB measured
+        # on qwen3 pod2) at ~18% step-time cost — fitting is binding.
+        return "bf16_seqpar"
+    return "bf16"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             with_roofline: bool = True, force: bool = False,
+             variant: str = "base") -> dict:
+    requested = variant
+    if variant == "auto":
+        variant = resolve_auto(SHAPES[shape_name], multi_pod)
+    perf_flags.set_variant(variant)
+    cell = _cell_id(arch, shape_name, multi_pod)
+    if requested != "base":
+        cell = f"{cell}__{requested}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record = {"cell": cell, "arch": arch, "shape": shape_name,
+              "multi_pod": multi_pod, "status": "unknown"}
+    if not cfg.supports(shape):
+        record.update(status="skipped", reason=cfg.skip_reason(shape))
+        _write(out_path, record)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # Arm activation sharding constraints (batch dim unshardable when 1).
+        S.set_activation_mesh(mesh, multi_pod=multi_pod,
+                              batch_sharded=shape.global_batch > 1)
+        fn, args, in_sh, out_sh, meta = build_lowerable(arch, shape_name, multi_pod)
+        with mesh:
+            in_shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
+                in_sh, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None,
+            )
+            out_shardings = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
+                out_sh, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None,
+            )
+            donate = (1,) if meta["kind"] == "decode" else ()
+            jitted = jax.jit(fn, in_shardings=in_shardings,
+                             out_shardings=out_shardings, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            record.update(
+                status="ok",
+                resolved_variant=variant,
+                meta=meta,
+                lower_s=round(t_lower, 1),
+                compile_s=round(t_compile, 1),
+                memory_analysis={
+                    k: int(getattr(mem, k))
+                    for k in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    )
+                    if hasattr(mem, k)
+                },
+                cost_analysis={
+                    "flops": float(cost.get("flops", -1)),
+                    "bytes_accessed": float(cost.get("bytes accessed", -1)),
+                },
+            )
+            if with_roofline:
+                record["roofline"] = analyze_compiled(
+                    compiled, cfg, shape, mesh_devices=mesh.size,
+                    model_axis=mesh.shape.get("model", 1),
+                    bf16_wire=perf_flags.flag("bf16_params"),
+                )
+    except Exception as e:  # record failures — they are bugs to fix
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    finally:
+        S.set_activation_mesh(None)
+    record["wall_s"] = round(time.time() - t0, 1)
+    _write(out_path, record)
+    return record
+
+
+def _write(path, record):
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="SpiDR-framework multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
+    ap.add_argument("--out", default=RESULT_DIR)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    choices=list(perf_flags.VARIANTS))
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               with_roofline=not args.no_roofline,
+                               force=args.force, variant=args.variant)
+                tag = rec["status"]
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    per_dev = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+                    extra = (
+                        f" args={per_dev/2**30:.2f}GiB"
+                        f" temp={rec['memory_analysis'].get('temp_size_in_bytes',0)/2**30:.2f}GiB"
+                        f" compile={rec.get('compile_s', 0):.0f}s"
+                    )
+                elif tag == "error":
+                    extra = " " + rec.get("error", "")[:120]
+                print(f"[{tag:7s}] {rec['cell']}{extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Batched serving driver: continuous-batching prefill + decode.
+
+Runs a real serving loop on host devices (reduced configs on CPU):
+  python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --requests 16
+
+Design (scaled-down vLLM-style):
+  * a request queue feeds a PREFILL worker (one request at a time — CPU
+    demo; on a pod this is a separate prefill mesh),
+  * decoded requests join the DECODE batch, stepped together; finished
+    sequences retire and free their cache slot for the next waiter
+    (continuous batching with slot reuse),
+  * the decode step is one jit'd function over a fixed-capacity batch —
+    shapes never change, so no recompilation during serving.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.models.transformer import init_decode_state
+
+logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+class Server:
+    """Fixed-capacity continuous-batching server."""
+
+    def __init__(self, cfg, params, capacity: int = 8, ctx_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.capacity, self.ctx_len = capacity, ctx_len
+        self.decode_step = jax.jit(M.make_decode_step(cfg), donate_argnums=(1,))
+        self.prefill = jax.jit(M.make_prefill_step(cfg))
+        # Batched cache: slot i belongs to active request i (or empty).
+        self.cache = init_decode_state(cfg, capacity, ctx_len)
+        self.slots: list = [None] * capacity
+        self.slot_len = np.zeros(capacity, np.int32)
+        self.next_tok = np.zeros((capacity, 1), np.int32)
+        self.waiting: list = []
+        self.done: list = []
+
+    def submit(self, req: Request):
+        req.submitted_at = time.monotonic()
+        self.waiting.append(req)
+
+    def _admit(self):
+        for i in range(self.capacity):
+            if self.slots[i] is None and self.waiting:
+                req = self.waiting.pop(0)
+                # Prefill one request; copy its KV into slot i.
+                logits, cache1 = self.prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt[None, :])}
+                )
+                tok = int(jnp.argmax(logits[0]))
+                req.generated.append(tok)
+                req.first_token_at = time.monotonic()
+                self._copy_into_slot(i, cache1, len(req.prompt))
+                self.slots[i] = req
+                self.slot_len[i] = len(req.prompt)
+                self.next_tok[i, 0] = tok
+
+    def _copy_into_slot(self, i, cache1, plen):
+        def put(dst, src):
+            if dst is None or not hasattr(dst, "ndim"):
+                return dst
+            if dst.ndim >= 2 and src is not None:
+                # layer-stacked: (L, B=cap, ...) <- (L, 1, ...)
+                pad = [(0, 0)] * src.ndim
+                if dst.ndim == src.ndim and dst.shape[1] == self.capacity:
+                    sl = [slice(None)] * dst.ndim
+                    sl[1] = slice(i, i + 1)
+                    upd = src
+                    if src.shape[3:4] and dst.shape[3] != src.shape[3] and dst.ndim > 3:
+                        # seq capacity differs: right-pad/truncate
+                        tgt = dst.shape[3]
+                        if src.shape[3] < tgt:
+                            pad[3] = (0, tgt - src.shape[3])
+                            upd = jnp.pad(src, pad)
+                        else:
+                            upd = src[:, :, :, :tgt]
+                    return dst.at[tuple(sl)].set(upd.astype(dst.dtype))
+                return dst
+            return dst
+
+        # dense/moe KV caches: prefill returns k/v as (L, B, Hkv, S, hd)
+        for key in self.cache:
+            if key == "len":
+                continue
+            src = cache1.get(key) if isinstance(cache1, dict) else None
+            if src is None:
+                continue
+            if key in ("k", "v"):
+                # cache1 seq dim = prompt len; place at [.., :plen, :]
+                dst = self.cache[key]
+                upd = src.astype(dst.dtype)
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    dst, upd, (0, i, 0, 0, 0)[: dst.ndim]
+                )
+            else:
+                self.cache[key] = put(self.cache[key], src)
+
+    def step(self):
+        self._admit()
+        active = [i for i in range(self.capacity) if self.slots[i] is not None]
+        if not active:
+            return False
+        # One batched decode step for every active slot (idle slots ride along).
+        self.cache["len"] = jnp.asarray(int(self.slot_len.max()), jnp.int32)
+        logits, self.cache = self.decode_step(
+            self.params, self.cache, {"tokens": jnp.asarray(self.next_tok)}
+        )
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.generated.append(tok)
+            self.slot_len[i] += 1
+            self.next_tok[i, 0] = tok
+            if len(req.generated) >= req.max_new or self.slot_len[i] >= self.ctx_len - 1:
+                req.done_at = time.monotonic()
+                self.done.append(req)
+                self.slots[i] = None  # free slot: continuous batching
+                self.slot_len[i] = 0
+        return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, params, capacity=args.capacity, ctx_len=64)
+
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        server.submit(Request(
+            rid=r,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            max_new=args.max_new,
+        ))
+    t0 = time.monotonic()
+    steps = 0
+    while server.step():
+        steps += 1
+    dt = time.monotonic() - t0
+    lat = [r.done_at - r.submitted_at for r in server.done]
+    ttft = [r.first_token_at - r.submitted_at for r in server.done]
+    toks = sum(len(r.generated) for r in server.done)
+    log.info(
+        "served %d requests, %d tokens in %.2fs (%.1f tok/s); "
+        "TTFT p50 %.3fs; latency p50 %.3fs; decode steps %d",
+        len(server.done), toks, dt, toks / dt,
+        float(np.median(ttft)), float(np.median(lat)), steps,
+    )
+
+
+if __name__ == "__main__":
+    main()

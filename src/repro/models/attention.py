@@ -1,0 +1,199 @@
+"""GQA attention: flash-style chunked prefill/train + cached decode.
+
+Memory-efficient attention is mandatory here: prefill_32k materializing
+(S x S) scores would need terabytes.  We scan over KV chunks with an
+online-softmax carry (running max / denominator / weighted accumulator),
+vectorized over query positions — the standard flash decomposition
+expressed in lax.scan so it lowers to one fused while-loop per layer.
+
+GQA is computed WITHOUT materializing repeated KV heads: queries are
+reshaped to (B, H_kv, group, S, D) and contracted against (B, H_kv, S, D).
+
+qk_norm (qwen3): per-head RMSNorm on q and k before RoPE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import apply_rope, rmsnorm
+
+__all__ = ["AttentionParams", "init_attention", "attention_forward", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+class AttentionParams(NamedTuple):
+    wq: jax.Array           # (D, Hq*hd)
+    wk: jax.Array           # (D, Hkv*hd)
+    wv: jax.Array           # (D, Hkv*hd)
+    wo: jax.Array           # (Hq*hd, D)
+    bq: Optional[jax.Array]
+    bk: Optional[jax.Array]
+    bv: Optional[jax.Array]
+    q_norm: Optional[jax.Array]  # (hd,) qk_norm scales
+    k_norm: Optional[jax.Array]
+
+
+def init_attention(key, cfg) -> AttentionParams:
+    from .common import dense_init
+
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return AttentionParams(
+        wq=dense_init(ks[0], (d, hq * hd)),
+        wk=dense_init(ks[1], (d, hkv * hd)),
+        wv=dense_init(ks[2], (d, hkv * hd)),
+        wo=dense_init(ks[3], (hq * hd, d)),
+        bq=jnp.zeros((hq * hd,)) if cfg.qkv_bias else None,
+        bk=jnp.zeros((hkv * hd,)) if cfg.qkv_bias else None,
+        bv=jnp.zeros((hkv * hd,)) if cfg.qkv_bias else None,
+        q_norm=jnp.ones((hd,)) if cfg.qk_norm else None,
+        k_norm=jnp.ones((hd,)) if cfg.qk_norm else None,
+    )
+
+
+def _project_qkv(p: AttentionParams, x: jax.Array, cfg, positions: jax.Array):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p.wq.astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p.wk.astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p.wv.astype(x.dtype))
+    if p.bq is not None:
+        q, k, v = q + p.bq.astype(x.dtype), k + p.bk.astype(x.dtype), v + p.bv.astype(x.dtype)
+    q = constrain(q.reshape(b, s, hq, hd), "dp", None, "model", None)
+    k = constrain(k.reshape(b, s, hkv, hd), "dp", None, "model", None)
+    v = constrain(v.reshape(b, s, hkv, hd), "dp", None, "model", None)
+    if p.q_norm is not None:
+        q = rmsnorm(q, p.q_norm.astype(jnp.float32), cfg.rmsnorm_eps)
+        k = rmsnorm(k, p.k_norm.astype(jnp.float32), cfg.rmsnorm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _flash_inner(q, k, v, q_pos0, kv_chunk: int, causal: bool):
+    """Online-softmax over KV chunks.
+
+    q: (B, Hkv, G, Sq, D) fp32-scaled; k/v: (B, Hkv, Skv, D).
+    Returns (B, Hkv, G, Sq, D).
+    """
+    b, hkv, g, sq, d = q.shape
+    skv = k.shape[2]
+    n_chunks = skv // kv_chunk
+
+    k_c = k.reshape(b, hkv, n_chunks, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    v_c = v.reshape(b, hkv, n_chunks, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_idx = q_pos0 + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inp
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", q, k_blk.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        if causal:
+            kv_idx = idx * kv_chunk + jnp.arange(kv_chunk)
+            mask = q_idx[:, None] >= kv_idx[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), k_c, v_c)
+    )
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def attention_forward(
+    p: AttentionParams,
+    x: jax.Array,              # (B, S, D)
+    cfg,
+    positions: Optional[jax.Array] = None,
+    kv_chunk: int = 1024,
+    return_cache: bool = False,
+):
+    """Causal self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    hd, hq, hkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+
+    scale = hd**-0.5
+    qg = (q * scale).astype(jnp.float32)
+    qg = qg.reshape(b, s, hkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,S,D)
+    kk = k.transpose(0, 2, 1, 3)  # (B,Hkv,S,D)
+    vv = v.transpose(0, 2, 1, 3)
+
+    chunk = min(kv_chunk, s)
+    while s % chunk:
+        chunk //= 2
+    out = _flash_inner(qg, kk, vv, 0, chunk, causal=True)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq * hd).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", out, p.wo.astype(x.dtype))
+    if return_cache:
+        return out, (kk, vv)  # cache layout (B, Hkv, S, D)
+    return out
+
+
+def decode_attention(
+    p: AttentionParams,
+    x: jax.Array,                # (B, 1, D)
+    cache_k: jax.Array,          # (B, Hkv, S_cache, D)
+    cache_v: jax.Array,
+    cache_len: jax.Array,        # scalar int32: valid prefix length
+    cfg,
+):
+    """One-token decode against a KV cache; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    hd, hq, hkv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    g = hq // hkv
+    positions = jnp.broadcast_to(cache_len, (b, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    # Insert the new token's K/V at cache_len (static-shape dynamic update).
+    k_new = k_new.transpose(0, 2, 1, 3)  # (B,Hkv,1,D)
+    v_new = v_new.transpose(0, 2, 1, 3)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, 0, cache_len, 0)
+    )
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, 0, cache_len, 0)
+    )
+
+    scale = hd**-0.5
+    qg = (q * scale).astype(jnp.float32).reshape(b, 1, hkv, g, hd)
+    qg = qg.transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,1,D)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, cache_k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    s_cache = cache_k.shape[2]
+    valid = jnp.arange(s_cache)[None, None, None, None, :] <= cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", w, cache_v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq * hd).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", out, p.wo.astype(x.dtype))
+    return out, cache_k, cache_v

@@ -1,0 +1,43 @@
+"""Dense FFN: SwiGLU (3-matrix) or GELU (2-matrix) variants.
+
+The serving path can swap the einsums for the ``quant_matmul`` Pallas
+kernel (SpiDR C2: low-precision weights, wide accumulators) via the
+``spidr_quant`` flag in the model builder.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import dense_init
+
+__all__ = ["FFNParams", "init_ffn", "ffn_forward"]
+
+
+class FFNParams(NamedTuple):
+    w_gate: Optional[jax.Array]  # (D, F)  — None for the gelu variant
+    w_up: jax.Array              # (D, F)
+    w_down: jax.Array            # (F, D)
+
+
+def init_ffn(key, d_model: int, d_ff: int, variant: str = "swiglu") -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return FFNParams(
+        w_gate=dense_init(k1, (d_model, d_ff)) if variant == "swiglu" else None,
+        w_up=dense_init(k2, (d_model, d_ff)),
+        w_down=dense_init(k3, (d_ff, d_model)),
+    )
+
+
+def ffn_forward(p: FFNParams, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    up = constrain(jnp.einsum("bsd,df->bsf", x, p.w_up.astype(dt)), "dp", None, "model")
+    if p.w_gate is not None:  # SwiGLU
+        gate = jnp.einsum("bsd,df->bsf", x, p.w_gate.astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:  # GELU
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p.w_down.astype(dt))

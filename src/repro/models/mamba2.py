@@ -1,0 +1,221 @@
+"""Mamba2 (SSD) blocks — the zamba2-7b backbone.
+
+Scalar-per-head decay state-space duality form (Dao & Gu 2024).  Per head
+(head dim P=64, state N=cfg.ssm_state):
+
+    h_t = a_t h_{t-1} + dt_t * B_t x_t^T          h: (N, P)
+    y_t = C_t^T h_t + D * x_t
+
+with a_t = exp(-dt_t * exp(A_log)) scalar per head, dt_t = softplus(dt_raw
++ bias).  Like RWKV6's wkv state, h is a Vmem-analogue: a stationary
+accumulator updated by per-token events (DESIGN.md §4).
+
+Training/prefill uses the chunked parallel form (all decay ratios are
+scalars — cheaper than RWKV6's per-channel case):
+
+    G_ij   = C_i . B_j                       (C x C inner products)
+    D_ij   = exp(la_i - la_j) * dt_j         (j <= i, log-space safe)
+    y_intra= (G*D) X,   y_inter = exp(la_i) C_i S0
+    S1     = exp(la_C) S0 + sum_j exp(la_C - la_j) dt_j B_j x_j^T
+
+Decode is the plain recurrence.  A depthwise causal conv (kernel 4) over
+(x, B, C) precedes the SSM, as in the reference implementation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import dense_init, rmsnorm
+
+__all__ = [
+    "Mamba2Params",
+    "init_mamba2_layer",
+    "mamba2_forward",
+    "mamba2_decode_step",
+    "init_mamba2_state",
+]
+
+HEAD_P = 64     # head dim
+CONV_K = 4      # depthwise conv kernel
+
+
+class Mamba2Params(NamedTuple):
+    w_in: jax.Array       # (D, 2*Di + 2*N + H) -> z, x, B, C, dt
+    conv_w: jax.Array     # (K, Di + 2*N) depthwise
+    conv_b: jax.Array     # (Di + 2*N,)
+    a_log: jax.Array      # (H,)
+    dt_bias: jax.Array    # (H,)
+    d_skip: jax.Array     # (H,)
+    norm_w: jax.Array     # (Di,) gated RMSNorm
+    w_out: jax.Array      # (Di, D)
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = di // HEAD_P
+    return di, n, h
+
+
+def init_mamba2_layer(key, cfg) -> Mamba2Params:
+    d = cfg.d_model
+    di, n, h = _dims(cfg)
+    ks = jax.random.split(key, 3)
+    return Mamba2Params(
+        w_in=dense_init(ks[0], (d, 2 * di + 2 * n + h)),
+        conv_w=(jax.random.normal(ks[1], (CONV_K, di + 2 * n)) * 0.2),
+        conv_b=jnp.zeros((di + 2 * n,)),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, h)),
+        dt_bias=jnp.full((h,), -2.0),
+        d_skip=jnp.ones((h,)),
+        norm_w=jnp.ones((di,)),
+        w_out=dense_init(ks[2], (di, d)),
+    )
+
+
+def _split_in(p: Mamba2Params, proj, cfg):
+    di, n, h = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along time. xbc: (B, S, C)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)  # (B, K-1, C)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :].astype(xbc.dtype)
+        for i in range(k)
+    )
+    new_state = full[:, -(k - 1) :, :]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def _ssd_chunked(xh, bb, cc, dt, la, s0, chunk: int):
+    """xh: (B,S,H,P); bb/cc: (B,S,N); dt: (B,S,H); la: (B,S,H) log-decay.
+
+    s0: (B,H,N,P). Returns (y, s_final).
+    """
+    b, s, h, p_ = xh.shape
+    n = bb.shape[-1]
+    nc = s // chunk
+
+    xc = xh.reshape(b, nc, chunk, h, p_).transpose(1, 0, 3, 2, 4)   # (nc,B,H,C,P)
+    bc = bb.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)          # (nc,B,C,N)
+    cc_ = cc.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)         # (nc,B,H,C)
+    lac = la.reshape(b, nc, chunk, h).transpose(1, 0, 3, 2)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(s_prev, inp):
+        xb, bbk, ccb, dtb, lab = inp
+        s_prev = constrain(s_prev, "dp", "model", None, None)
+        la_incl = jnp.cumsum(lab, axis=-1)                       # (B,H,C)
+        g = jnp.einsum("bin,bjn->bij", ccb, bbk)                 # (B,C,C)
+        ratio = jnp.exp(
+            jnp.where(
+                tri[None, None], la_incl[:, :, :, None] - la_incl[:, :, None, :],
+                -jnp.inf,
+            )
+        )                                                        # (B,H,C,C)
+        m = g[:, None] * ratio * dtb[:, :, None, :]              # (B,H,C,C)
+        y_intra = jnp.einsum("bhij,bhjp->bhip", m, xb)
+        y_inter = jnp.einsum(
+            "bhc,bcn,bhnp->bhcp", jnp.exp(la_incl), ccb, s_prev
+        )
+        la_last = la_incl[:, :, -1]                              # (B,H)
+        k_scaled = jnp.exp(la_last[:, :, None] - la_incl) * dtb  # (B,H,C)
+        s_new = s_prev * jnp.exp(la_last)[..., None, None] + jnp.einsum(
+            "bhc,bcn,bhcp->bhnp", k_scaled, bbk, xb
+        )
+        return (constrain(s_new, "dp", "model", None, None),
+                (y_intra + y_inter).transpose(0, 2, 1, 3))  # (B,C,H,P)
+
+    s_final, ys = jax.lax.scan(body, s0, (xc, bc, cc_, dtc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_)
+    return y, s_final
+
+
+def mamba2_forward(p: Mamba2Params, x, state, cfg, chunk: int = 64):
+    """Full-sequence Mamba2 block. x: (B,S,D) (pre-normed by caller).
+
+    state = (conv_state (B,K-1,Di+2N), ssm_state (B,H,N,P)).
+    """
+    b, s, d = x.shape
+    di, n, h = _dims(cfg)
+    conv_state, s0 = state
+    dt_ = x.dtype
+
+    proj = jnp.einsum("bsd,de->bse", x, p.w_in.astype(dt_))
+    z, xbc, dt_raw = _split_in(p, proj, cfg)
+    xbc, conv_state_new = _causal_conv(xbc, p.conv_w, p.conv_b, conv_state)
+    xh = constrain(xbc[..., :di].reshape(b, s, h, HEAD_P), "dp", None, "model", None)
+    bb = xbc[..., di : di + n]
+    cc = xbc[..., di + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)     # (B,S,H)
+    la = -dt * jnp.exp(p.a_log)[None, None, :]                       # log a_t < 0
+
+    pad = -s % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh, bb, cc, dt, la = map(zp, (xh, bb, cc, dt, la))
+    s0 = constrain(s0.astype(jnp.float32), "dp", "model", None, None)
+    y, s_f = _ssd_chunked(
+        xh.astype(jnp.float32), bb.astype(jnp.float32), cc.astype(jnp.float32),
+        dt, la, s0, min(chunk, xh.shape[1]),
+    )
+    y = y[:, :s]
+    y = y + p.d_skip[None, None, :, None] * xh[:, :s].astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(dt_)
+    y = rmsnorm(y, p.norm_w.astype(jnp.float32), cfg.rmsnorm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p.w_out.astype(dt_))
+    return out, (conv_state_new, s_f)
+
+
+def mamba2_decode_step(p: Mamba2Params, x, state, cfg):
+    """Single-token recurrence. x: (B, 1, D)."""
+    b, _, d = x.shape
+    di, n, h = _dims(cfg)
+    conv_state, s0 = state
+    dt_ = x.dtype
+
+    proj = jnp.einsum("bsd,de->bse", x, p.w_in.astype(dt_))
+    z, xbc, dt_raw = _split_in(p, proj, cfg)
+    xbc, conv_state_new = _causal_conv(xbc, p.conv_w, p.conv_b, conv_state)
+    xh = xbc[:, 0, :di].reshape(b, h, HEAD_P)
+    bb = xbc[:, 0, di : di + n]
+    cc = xbc[:, 0, di + n :]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p.dt_bias)  # (B,H)
+    a = jnp.exp(-dt * jnp.exp(p.a_log)[None, :])                        # (B,H)
+
+    xf, bf, cf = (t.astype(jnp.float32) for t in (xh, bb, cc))
+    s_new = s0 * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bf, xf
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cf, s_new)
+    y = y + p.d_skip[None, :, None] * xf
+    y = y.reshape(b, 1, di).astype(dt_)
+    y = rmsnorm(y, p.norm_w.astype(jnp.float32), cfg.rmsnorm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p.w_out.astype(dt_))
+    return out, (conv_state_new, s_new)
+
+
+def init_mamba2_state(batch: int, cfg, dtype=jnp.float32):
+    di, n, h = _dims(cfg)
+    return (
+        jnp.zeros((batch, CONV_K - 1, di + 2 * n), dtype),
+        jnp.zeros((batch, h, n, HEAD_P), jnp.float32),
+    )

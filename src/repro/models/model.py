@@ -1,0 +1,256 @@
+"""Model driver: params init, forward, train/prefill/serve step builders.
+
+One entry point per shape kind:
+  * ``make_train_step(cfg)``   — fwd + CE loss (+ MoE aux) + bwd + AdamW
+  * ``make_prefill_step(cfg)`` — full-sequence forward, returns last-token
+    logits + the populated decode cache
+  * ``make_decode_step(cfg)``  — one token against a KV/state cache
+
+Everything is a pure function of (params, opt_state, batch) pytrees so the
+launchers can pjit them with the partition specs from ``repro.sharding``.
+Dry-run lowers these exact functions abstractly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import flags
+from ..configs.base import ArchConfig
+from ..optim.optimizer import adamw, apply_updates, clip_by_global_norm
+from ..sharding import constrain
+from .common import cross_entropy_loss, dense_init, embed_init, rmsnorm
+from .transformer import decode_blocks, forward_blocks, init_blocks, init_decode_state
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "init_opt_state",
+    "abstract_opt_state",
+    "forward",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "abstract_decode_cache",
+]
+
+COMPUTE_DTYPE = jnp.bfloat16
+MOE_AUX_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    # Megatron-style padded vocab: shards evenly over the model axis; the
+    # pad logit columns are masked to -inf in _head_logits.
+    params = {
+        "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model),
+        "blocks": init_blocks(k_blocks, cfg),
+        "final_norm": jnp.ones((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.padded_vocab))
+    return params
+
+
+def _compute_params(params):
+    """Mixed precision: bf16 compute copies of the fp32 masters.
+
+    The cast is elementwise on the SHARDED leaves, so every downstream
+    FSDP all-gather moves bf16 (half the wire bytes) and parameter
+    cotangents come back as bf16 (halving the gradient reduction too).
+    Masters + optimizer state stay fp32.
+    """
+    if not flags.flag("bf16_params"):
+        return params
+
+    def cast(p):
+        if (p is None or not hasattr(p, "dtype") or p.dtype != jnp.float32
+                or p.ndim < 2):
+            return p
+        # optimization_barrier stops XLA's excess-precision pass from
+        # folding f32->bf16->f32 back to f32, which would silently move
+        # the FSDP all-gathers back to 4-byte words.
+        return jax.lax.optimization_barrier(p.astype(jnp.bfloat16))
+
+    return jax.tree.map(cast, params, is_leaf=lambda x: x is None)
+
+
+def _head_logits(params, cfg, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", h, head.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.padded_vocab != cfg.vocab_size:  # mask pad columns
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid[None, None, :], logits, -1e30)
+    return logits
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def init_opt_state(params):
+    _, state = adamw(params=params)
+    return state
+
+
+def abstract_opt_state(params_abstract):
+    return jax.eval_shape(
+        lambda: {
+            "mu": jax.tree.map(jnp.zeros_like, params_abstract),
+            "nu": jax.tree.map(jnp.zeros_like, params_abstract),
+        }
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: Optional[jax.Array] = None,   # (B, S) int32
+    embeds: Optional[jax.Array] = None,   # (B, S, D) — stub-frontend input
+    remat: bool = False,
+    return_cache: bool = False,
+):
+    """Returns (logits, aux, cache)."""
+    if embeds is None:
+        h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    else:
+        h = embeds.astype(COMPUTE_DTYPE)
+    # The embedding gather is where XLA propagation loses the batch
+    # sharding — re-pin it before entering the layer stack.
+    h = constrain(h, "dp", None, None)
+    h, aux, cache = forward_blocks(
+        params["blocks"], h, cfg, remat=remat, return_cache=return_cache
+    )
+    h = rmsnorm(h, params["final_norm"].astype(jnp.float32), cfg.rmsnorm_eps)
+    logits = constrain(_head_logits(params, cfg, h), "dp", None, "model")
+    return logits, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Train step (fwd + bwd + AdamW, grad-clipped)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, lr: float = 3e-4, grad_clip: float = 1.0,
+                    weight_decay: float = 0.1, remat: bool = True,
+                    accum_steps: int = 1):
+    """``accum_steps > 1`` scans over microbatches, accumulating fp32
+    grads — activation memory scales with B/accum_steps while the
+    optimizer sees the full-batch mean gradient."""
+    update_fn, _ = adamw(lr=lr, weight_decay=weight_decay)
+
+    def loss_fn(params, batch):
+        params = _compute_params(params)
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        logits, aux, _ = forward(params, cfg, tokens=tokens, embeds=embeds, remat=remat)
+        # next-token prediction: shift by one
+        loss = cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+        total = loss
+        if aux:
+            total = (
+                total
+                + MOE_AUX_WEIGHT * aux.get("load_balance_loss", 0.0)
+                + MOE_Z_WEIGHT * aux.get("router_z_loss", 0.0)
+            )
+        return total, {"ce_loss": loss, **aux}
+
+    def _grads_fp32(grads):
+        # bf16 cotangents -> fp32 for the optimizer (masters are fp32)
+        return jax.tree.map(
+            lambda g: g.astype(jnp.float32)
+            if g is not None and g.dtype == jnp.bfloat16 else g,
+            grads, is_leaf=lambda x: x is None,
+        )
+
+    def train_step(params, opt_state, step, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            grads = _grads_fp32(grads)
+        else:
+            # Microbatch scan: split the leading (batch) dim of every input.
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def mb_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g = _grads_fp32(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a if b is None else a + b, g_acc, g,
+                    is_leaf=lambda x: x is None,
+                )
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: None if p is None else jnp.zeros(p.shape, jnp.float32),
+                params, is_leaf=lambda x: x is None,
+            )
+            (grads, loss_sum), _ = jax.lax.scan(mb_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(
+                lambda g: None if g is None else g / accum_steps, grads,
+                is_leaf=lambda x: x is None,
+            )
+            loss = loss_sum / accum_steps
+            metrics = {"ce_loss": loss}
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = update_fn(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, **metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        params = _compute_params(params)
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        logits, _, cache = forward(
+            params, cfg, tokens=tokens, embeds=embeds, return_cache=True
+        )
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, cache, batch):
+        params = _compute_params(params)
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        if embeds is None:
+            h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+        else:
+            h = embeds.astype(COMPUTE_DTYPE)
+        h = constrain(h, "dp", None, None)
+        h, new_cache = decode_blocks(params["blocks"], h, cache, cfg)
+        h = rmsnorm(h, params["final_norm"].astype(jnp.float32), cfg.rmsnorm_eps)
+        logits = _head_logits(params, cfg, h)
+        return logits[:, 0, :], new_cache
+
+    return decode_step
+
+
+def abstract_decode_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, seq_len))

@@ -1,0 +1,193 @@
+"""Mixture-of-Experts with top-k token-choice routing (granite / moonshot).
+
+The router's top-k selection IS SpiDR's zero-skipping made structural
+(DESIGN.md §4): only k of E experts compute per token; the dispatch plays
+the role of the S2A address queue (route events to the unit holding the
+relevant weights).
+
+Distribution: the MoE layer drops from pjit auto-SPMD into an explicit
+``shard_map`` — auto-SPMD cannot partition the dispatch scatter (the first
+dry-runs materialized 60 GiB replicated index tensors).  Per-device code
+operates on LOCAL token blocks, so the capacity cumsum/scatter never
+crosses devices:
+
+  EP path (n_experts divisible by the model axis — moonshot 64/16):
+    tokens sharded over data axes and replicated over 'model'; each device
+    holds E/model_size experts and computes them for its local
+    tokens; the combine is ONE psum over 'model' (same wire cost as a
+    dense-FFN TP all-reduce).  Dispatch itself moves ZERO bytes.
+
+  Replicated-experts path (granite 40 on 16): expert weights replicate
+    inside the layer (per-layer all-gather) and tokens also shard over
+    'model' via the sequence dim — every token is computed exactly once,
+    no combine collective at all.
+
+Single-device (tests) falls back to the same local function without
+shard_map.  Over-capacity tokens drop (scatter mode='drop'), the standard
+static-shape formulation.  Aux: Shazeer load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import flags
+from ..sharding import _ACT, axis_divides
+from .common import dense_init
+
+__all__ = ["MoEParams", "init_moe", "moe_forward"]
+
+
+class MoEParams(NamedTuple):
+    w_router: jax.Array  # (D, E)
+    w_gate: jax.Array    # (E, D, F)
+    w_up: jax.Array      # (E, D, F)
+    w_down: jax.Array    # (E, F, D)
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int) -> MoEParams:
+    ks = jax.random.split(key, 4)
+    std = 1.0 / jnp.sqrt(d_model)
+    stdf = 1.0 / jnp.sqrt(d_ff)
+    return MoEParams(
+        w_router=dense_init(ks[0], (d_model, n_experts)),
+        w_gate=(jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * std),
+        w_up=(jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * std),
+        w_down=(jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * stdf),
+    )
+
+
+def _local_moe(x, w_router, w_gate, w_up, w_down, top_k: int,
+               capacity_factor: float, e_total: int, e_offset_fn=None):
+    """Per-device MoE on LOCAL tokens. x: (T, D). Weights: local expert slice.
+
+    Router scores against ALL e_total experts; only experts in the local
+    slice [e0, e0+e_loc) are computed here.  Returns (out, aux-partials).
+    """
+    t, d = x.shape
+    e_loc = w_gate.shape[0]
+    e0 = e_offset_fn() if e_offset_fn else 0
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, top_k)             # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    cap = int(max(1, round(t * top_k / e_total * capacity_factor)))
+    flat_ids = top_ids.reshape(-1)                           # (T*k,) global ids
+    local_ids = flat_ids - e0
+    in_slice = (local_ids >= 0) & (local_ids < e_loc)
+
+    onehot = jax.nn.one_hot(flat_ids, e_total, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (T*k,)
+    keep = (pos < cap) & in_slice
+    slot = jnp.where(keep, local_ids * cap + pos, e_loc * cap)
+
+    token_idx = jnp.repeat(jnp.arange(t), top_k)
+    buf = jnp.zeros((e_loc * cap, d), x.dtype)
+    buf = buf.at[slot].set(jnp.take(x, token_idx, axis=0), mode="drop")
+    buf = buf.reshape(e_loc, cap, d)
+
+    dt = x.dtype
+    gate = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dt))
+    h = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(dt)).reshape(-1, d)
+
+    gathered = out_buf.at[slot].get(mode="fill", fill_value=0)  # (T*k, D)
+    w = (top_w.reshape(-1) * keep).astype(dt)
+    out = jax.ops.segment_sum(gathered * w[:, None], token_idx, num_segments=t)
+
+    frac = jnp.mean(jax.nn.one_hot(top_ids, e_total, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=0)
+    lb_loss = e_total * jnp.sum(frac * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    drop = 1.0 - jnp.mean(((pos < cap) & (flat_ids >= 0)).astype(jnp.float32))
+    return out, lb_loss, z_loss, drop
+
+
+def moe_forward(p: MoEParams, x: jax.Array, top_k: int,
+                capacity_factor: float = 1.25):
+    """x: (B, S, D). Returns (out, aux)."""
+    b, s, d = x.shape
+    e = p.w_router.shape[1]
+    mesh = _ACT["mesh"]
+
+    if mesh is None:  # single-device path (unit tests, host runs)
+        out, lb, zl, drop = _local_moe(
+            x.reshape(-1, d), p.w_router, p.w_gate, p.w_up, p.w_down,
+            top_k, capacity_factor, e,
+        )
+        return out.reshape(b, s, d), {
+            "load_balance_loss": lb, "router_z_loss": zl, "drop_fraction": drop
+        }
+
+    dp = _ACT["dp"] or ()
+    # dp_only folds the model axis into data parallelism: inside this layer
+    # there is no separate model axis to use for EP or token splitting.
+    model_size = 1 if flags.flag("dp_only") else mesh.shape["model"]
+    shard_map = functools.partial(
+        jax.shard_map, mesh=mesh, check_vma=False
+    )
+
+    ep = model_size > 1 and e % model_size == 0
+    b_spec = dp if (dp and b % _size(mesh, dp) == 0) else None
+    if ep:
+        # EP: tokens replicated over 'model'; each shard computes its slice.
+        def fn(xl, wr, wg, wu, wd):
+            t_loc = xl.shape[0] * xl.shape[1]
+            e_loc = wg.shape[0]
+            e0 = jax.lax.axis_index("model") * e_loc
+            out, lb, zl, drop = _local_moe(
+                xl.reshape(t_loc, d), wr, wg, wu, wd, top_k,
+                capacity_factor, e, lambda: e0,
+            )
+            out = jax.lax.psum(out, "model")
+            all_axes = tuple(mesh.axis_names)
+            return (out.reshape(xl.shape),
+                    jax.lax.pmean(lb, all_axes), jax.lax.pmean(zl, all_axes),
+                    jax.lax.pmean(drop, all_axes))
+
+        in_specs = (
+            P(b_spec, None, None), P(None, None),
+            P("model", None, None), P("model", None, None), P("model", None, None),
+        )
+        out_specs = (P(b_spec, None, None), P(), P(), P())
+    else:
+        # Replicated experts; tokens also split over 'model' (seq dim when
+        # divisible, else redundant compute — only tiny decode batches).
+        s_spec = "model" if (model_size > 1 and s % model_size == 0) else None
+
+        def fn(xl, wr, wg, wu, wd):
+            t_loc = xl.shape[0] * xl.shape[1]
+            out, lb, zl, drop = _local_moe(
+                xl.reshape(t_loc, d), wr, wg, wu, wd, top_k, capacity_factor, e,
+            )
+            all_axes = tuple(mesh.axis_names)
+            return (out.reshape(xl.shape), jax.lax.pmean(lb, all_axes),
+                    jax.lax.pmean(zl, all_axes), jax.lax.pmean(drop, all_axes))
+
+        in_specs = (
+            P(b_spec, s_spec, None), P(None, None),
+            P(None, None, None), P(None, None, None), P(None, None, None),
+        )
+        out_specs = (P(b_spec, s_spec, None), P(), P(), P())
+
+    out, lb, zl, drop = shard_map(fn, in_specs=in_specs, out_specs=out_specs)(
+        x, p.w_router, p.w_gate, p.w_up, p.w_down
+    )
+    return out, {"load_balance_loss": lb, "router_z_loss": zl,
+                 "drop_fraction": drop}
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

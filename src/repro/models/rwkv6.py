@@ -1,0 +1,273 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+This is the arch where SpiDR's C1 maps most directly (DESIGN.md §4): the
+per-head wkv state S (d_k x d_v) is a membrane potential — a stationary
+accumulator updated by a decayed outer-product "event" per token, held in
+fast memory while tokens stream through, exactly the weight/Vmem
+co-location story.
+
+Per head (head size N, here 64), with data-dependent per-channel decay
+w_t in (0,1)^N and bonus u:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Training/prefill uses the CHUNKED parallel form (flash-linear-attention
+style): within a chunk of C tokens the pairwise decay products are
+computed in log space (all exponents <= 0, numerically safe) as a
+(C, C, N) tensor contracted on the fly; across chunks a lax.scan carries S.
+Decode is the plain recurrence.
+
+Token-shift "ddlerp" (the Finch data-dependent lerp) uses the official
+low-rank parameterization: 5-way tm LoRA (rank 32) + decay LoRA (rank 64).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import constrain
+from .common import dense_init, rmsnorm
+
+__all__ = [
+    "RWKV6Params",
+    "init_rwkv6_layer",
+    "rwkv6_time_mix",
+    "rwkv6_channel_mix",
+    "rwkv6_time_mix_decode",
+    "rwkv6_channel_mix_decode",
+    "init_rwkv6_state",
+]
+
+TM_RANK = 32
+TD_RANK = 64
+HEAD_SIZE = 64
+
+
+class RWKV6Params(NamedTuple):
+    # time-mix ddlerp
+    mu_x: jax.Array      # (D,)
+    tm_w1: jax.Array     # (D, 5*TM_RANK)
+    tm_w2: jax.Array     # (5, TM_RANK, D)
+    mu_rkvwg: jax.Array  # (5, D)
+    # projections
+    wr: jax.Array        # (D, D)
+    wk: jax.Array
+    wv: jax.Array
+    wg: jax.Array
+    wo: jax.Array
+    # decay
+    td_w1: jax.Array     # (D, TD_RANK)
+    td_w2: jax.Array     # (TD_RANK, D)
+    time_decay: jax.Array  # (D,)
+    bonus_u: jax.Array     # (D,)
+    ln_x: jax.Array        # (D,) per-head groupnorm scale
+    # channel-mix
+    cm_mu_k: jax.Array   # (D,)
+    cm_mu_r: jax.Array   # (D,)
+    cm_wk: jax.Array     # (D, F)
+    cm_wv: jax.Array     # (F, D)
+    cm_wr: jax.Array     # (D, D)
+
+
+def init_rwkv6_layer(key, cfg) -> RWKV6Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    return RWKV6Params(
+        mu_x=jnp.full((d,), 0.5),
+        tm_w1=dense_init(ks[0], (d, 5 * TM_RANK)),
+        tm_w2=(jax.random.normal(ks[1], (5, TM_RANK, d)) * 0.01),
+        mu_rkvwg=jnp.full((5, d), 0.5),
+        wr=dense_init(ks[2], (d, d)),
+        wk=dense_init(ks[3], (d, d)),
+        wv=dense_init(ks[4], (d, d)),
+        wg=dense_init(ks[5], (d, d)),
+        wo=dense_init(ks[6], (d, d)),
+        td_w1=dense_init(ks[7], (d, TD_RANK)),
+        td_w2=(jax.random.normal(ks[8], (TD_RANK, d)) * 0.01),
+        time_decay=jnp.full((d,), -2.0),
+        bonus_u=(jax.random.normal(ks[9], (d,)) * 0.1),
+        ln_x=jnp.ones((d,)),
+        cm_mu_k=jnp.full((d,), 0.5),
+        cm_mu_r=jnp.full((d,), 0.5),
+        cm_wk=dense_init(ks[10], (d, f)),
+        cm_wv=dense_init(ks[11], (f, d)),
+        cm_wr=dense_init(jax.random.fold_in(key, 99), (d, d)),
+    )
+
+
+def _ddlerp(p: RWKV6Params, x, x_prev):
+    """Finch data-dependent token shift -> (xr, xk, xv, xw, xg)."""
+    sx = x_prev - x
+    xxx = x + sx * p.mu_x.astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("...d,dr->...r", xxx, p.tm_w1.astype(x.dtype)))
+    b, s, _ = lora.shape if lora.ndim == 3 else (*lora.shape, None)[:3]
+    lora = lora.reshape(*lora.shape[:-1], 5, TM_RANK)
+    mix = jnp.einsum("...nr,nrd->...nd", lora, p.tm_w2.astype(x.dtype))
+    mu = p.mu_rkvwg.astype(x.dtype)  # (5, D)
+    streams = x[..., None, :] + sx[..., None, :] * (mu + mix)  # (..., 5, D)
+    return [streams[..., i, :] for i in range(5)]
+
+
+def _decay_log(p: RWKV6Params, xw):
+    """log(w_t) = -exp(time_decay + lora(xw)); always < 0."""
+    ww = jnp.einsum(
+        "...d,dr->...r", jnp.tanh(xw.astype(jnp.float32)), p.td_w1.astype(jnp.float32)
+    )
+    ww = jnp.einsum("...r,rd->...d", ww, p.td_w2.astype(jnp.float32))
+    return -jnp.exp(p.time_decay.astype(jnp.float32) + ww)
+
+
+def _wkv_chunked(r, k, v, lw, u, s0, chunk: int):
+    """Chunked wkv over a full sequence.
+
+    r/k/v: (B, S, H, N); lw: (B, S, H, N) log-decay (<0); u: (H, N)
+    s0: (B, H, N, N) initial state.  Returns (y, s_final).
+    """
+    b, s, h, n = r.shape
+    nc = s // chunk
+
+    def reshape_c(x):
+        return x.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)  # (nc,B,H,C,N)
+
+    rc, kc, vc, lwc = map(reshape_c, (r, k, v, lw))
+
+    tri_strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(s_prev, inp):
+        rb, kb, vb, lwb = inp  # (B,H,C,N)
+        s_prev = constrain(s_prev, "dp", "model", None, None)
+        lw_incl = jnp.cumsum(lwb, axis=2)           # (B,H,C,N)
+        lw_excl = lw_incl - lwb
+        # inter-chunk: y_i += (r_i * e^{lw_excl_i}) @ S_prev
+        y_inter = jnp.einsum("bhcn,bhnm->bhcm", rb * jnp.exp(lw_excl), s_prev)
+        # intra-chunk: A_ij = sum_n r_i k_j e^{lw_excl_i - lw_incl_j}, j<i
+        ratio = jnp.exp(
+            jnp.where(
+                tri_strict[None, None, :, :, None],
+                lw_excl[:, :, :, None, :] - lw_incl[:, :, None, :, :],
+                -jnp.inf,
+            )
+        )  # (B,H,C,C,N) — exponents <= 0
+        a = jnp.einsum("bhin,bhjn,bhijn->bhij", rb, kb, ratio)
+        y_intra = jnp.einsum("bhij,bhjn->bhin", a, vb)
+        # diagonal bonus term (j == i): y_i += (sum_n r_i u k_i) v_i
+        diag_coef = jnp.sum(rb * u[None, :, None, :] * kb, axis=-1, keepdims=True)
+        y_intra = y_intra + diag_coef * vb
+        # state update
+        decay_all = jnp.exp(lw_incl[:, :, -1:, :])          # (B,H,1,N)
+        k_scaled = kb * jnp.exp(lw_incl[:, :, -1:, :] - lw_incl)
+        s_new = s_prev * decay_all.squeeze(2)[..., None] + jnp.einsum(
+            "bhcn,bhcm->bhnm", k_scaled, vb
+        )
+        return constrain(s_new, "dp", "model", None, None), y_inter + y_intra
+
+    s_final, ys = jax.lax.scan(body, s0, (rc, kc, vc, lwc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n)
+    return y, s_final
+
+
+def _wkv_kernel_path(r, k, v, lw, u, s0, chunk):
+    from ..kernels.wkv_chunk import wkv_sequence
+
+    return wkv_sequence(r, k, v, lw, u, s0, chunk=chunk,
+                        interpret=jax.default_backend() != "tpu")
+
+
+def rwkv6_time_mix(p: RWKV6Params, x, x_prev, s0, cfg, chunk: int = 32,
+                   use_kernel: bool | None = None):
+    """Full-sequence time-mix. x: (B,S,D). Returns (y, x_last, s_final).
+
+    ``use_kernel`` selects the Pallas wkv kernel (kernels/wkv_chunk.py);
+    default: on real TPU only (the jnp chunked form is the oracle and the
+    CPU path).
+    """
+    b, s, d = x.shape
+    h, n = d // HEAD_SIZE, HEAD_SIZE
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    dt = x.dtype
+    r = constrain(jnp.einsum("bsd,de->bse", xr, p.wr.astype(dt)).reshape(b, s, h, n), "dp", None, "model", None)
+    k = constrain(jnp.einsum("bsd,de->bse", xk, p.wk.astype(dt)).reshape(b, s, h, n), "dp", None, "model", None)
+    v = constrain(jnp.einsum("bsd,de->bse", xv, p.wv.astype(dt)).reshape(b, s, h, n), "dp", None, "model", None)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p.wg.astype(dt)))
+    lw = _decay_log(p, xw).reshape(b, s, h, n)
+
+    u = p.bonus_u.astype(jnp.float32).reshape(h, n)
+    pad = -s % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=-0.1)
+    s0 = constrain(s0.astype(jnp.float32), "dp", "model", None, None)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    wkv_fn = _wkv_kernel_path if use_kernel else _wkv_chunked
+    y, s_f = wkv_fn(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        lw, u, s0, min(chunk, r.shape[1]),
+    )
+    y = y[:, :s]
+    # per-head groupnorm then gate + out proj
+    y = rmsnorm(y.reshape(b, s, h, n), jnp.ones((n,)), 64e-5).reshape(b, s, d)
+    y = (y.astype(dt) * p.ln_x.astype(dt)) * g
+    out = jnp.einsum("bsd,de->bse", y, p.wo.astype(dt))
+    return out, x[:, -1, :], s_f
+
+
+def rwkv6_channel_mix(p: RWKV6Params, x, x_prev):
+    """Finch channel-mix (squared-relu FFN with token shift)."""
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    sx = xs - x
+    dt = x.dtype
+    xk = x + sx * p.cm_mu_k.astype(dt)
+    xr = x + sx * p.cm_mu_r.astype(dt)
+    k = jnp.einsum("bsd,df->bsf", xk, p.cm_wk.astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p.cm_wv.astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p.cm_wr.astype(dt)))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv6_channel_mix_decode(p: RWKV6Params, x, x_prev):
+    """Single-token channel mix. x: (B, 1, D); x_prev: (B, D)."""
+    out, _ = rwkv6_channel_mix(p, x, x_prev)
+    return out, x[:, -1, :]
+
+
+def rwkv6_time_mix_decode(p: RWKV6Params, x, x_prev, s0, cfg):
+    """Single-token time-mix via the plain recurrence. x: (B, 1, D).
+
+    Returns (out, x_last, s_new) — same contract as rwkv6_time_mix.
+    """
+    b, _, d = x.shape
+    h, n = d // HEAD_SIZE, HEAD_SIZE
+    xs = x_prev[:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xs)
+    dt = x.dtype
+    r = jnp.einsum("bsd,de->bse", xr, p.wr.astype(dt)).reshape(b, h, n)
+    k = jnp.einsum("bsd,de->bse", xk, p.wk.astype(dt)).reshape(b, h, n)
+    v = jnp.einsum("bsd,de->bse", xv, p.wv.astype(dt)).reshape(b, h, n)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p.wg.astype(dt))).reshape(b, h, n)
+    w = jnp.exp(_decay_log(p, xw)).reshape(b, h, n)
+    u = p.bonus_u.astype(jnp.float32).reshape(h, n)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    y = jnp.einsum("bhn,bhnm->bhm", rf, s0 + u[None, :, :, None] * kv)
+    s_new = s0 * w[..., None] + kv
+    y = rmsnorm(y.reshape(b, 1, h, n), jnp.ones((n,)), 64e-5).reshape(b, 1, d)
+    y = (y.astype(dt) * p.ln_x.astype(dt)) * g.reshape(b, 1, d)
+    out = jnp.einsum("bsd,de->bse", y, p.wo.astype(dt))
+    return out, x[:, -1, :], s_new
+
+
+def init_rwkv6_state(batch: int, d_model: int, dtype=jnp.float32):
+    h, n = d_model // HEAD_SIZE, HEAD_SIZE
+    return (
+        jnp.zeros((batch, d_model), dtype),
+        jnp.zeros((batch, d_model), dtype),
+        jnp.zeros((batch, h, n, n), jnp.float32),
+    )

@@ -1,0 +1,421 @@
+"""Block composition + scan-over-layers for every assigned family.
+
+Families:
+  dense / audio / vlm : pre-norm attention + FFN (SwiGLU or GELU)
+  moe                 : pre-norm attention + top-k MoE FFN
+  ssm (rwkv6)         : time-mix + channel-mix with carried wkv state
+  hybrid (zamba2)     : Mamba2 backbone, one SHARED attention+FFN block
+                        applied every ``attn_period`` slots (weight reuse)
+
+All stacks lax.scan over stacked layer params (one compiled block body per
+family — keeps HLO size and compile time flat in depth) with
+jax.checkpoint around the body in training (activation remat: only layer
+boundaries are saved).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .. import flags
+from ..sharding import constrain
+from .attention import (
+    AttentionParams,
+    attention_forward,
+    decode_attention,
+    init_attention,
+)
+from .common import rmsnorm
+from .ffn import FFNParams, ffn_forward, init_ffn
+from .mamba2 import (
+    CONV_K,
+    HEAD_P,
+    Mamba2Params,
+    init_mamba2_layer,
+    init_mamba2_state,
+    mamba2_decode_step,
+    mamba2_forward,
+)
+from .moe import MoEParams, init_moe, moe_forward
+from .rwkv6 import (
+    HEAD_SIZE,
+    RWKV6Params,
+    init_rwkv6_layer,
+    rwkv6_channel_mix,
+    rwkv6_channel_mix_decode,
+    rwkv6_time_mix,
+    rwkv6_time_mix_decode,
+)
+
+__all__ = ["init_blocks", "forward_blocks", "decode_blocks", "init_decode_state"]
+
+
+def _boundary(h):
+    """Residual-stream layer boundary: sharding (SP optional) + remat name."""
+    if flags.flag("sequence_parallel"):
+        h = constrain(h, "dp", "model", None)   # sequence-sharded residuals
+    else:
+        h = constrain(h, "dp", None, None)
+    return checkpoint_name(h, "block_out")
+
+
+def _block_input(h):
+    """Gather the sequence dim back before attention/ffn projections."""
+    if flags.flag("sequence_parallel"):
+        return constrain(h, "dp", None, None)
+    return h
+
+
+def _remat(fn, remat: bool):
+    if not remat:
+        return fn
+    if flags.flag("remat_saveout"):
+        policy = jax.checkpoint_policies.save_only_these_names("block_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _zamba2_layout(cfg):
+    p = cfg.attn_period or 6
+    n_groups = cfg.n_layers // p
+    per_group = p - 1
+    tail = cfg.n_layers - n_groups * p
+    return n_groups, per_group, tail
+
+
+def init_blocks(key, cfg) -> dict:
+    d = cfg.d_model
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        keys = jax.random.split(key, cfg.n_layers)
+        layers = _stack(
+            [
+                {
+                    "ln1": jnp.ones((d,)),
+                    "attn": init_attention(k, cfg),
+                    "ln2": jnp.ones((d,)),
+                    "ffn": init_ffn(jax.random.fold_in(k, 1), d, cfg.d_ff, cfg.ffn_variant),
+                }
+                for k in keys
+            ]
+        )
+        return {"layers": layers}
+    if fam == "moe":
+        keys = jax.random.split(key, cfg.n_layers)
+        layers = _stack(
+            [
+                {
+                    "ln1": jnp.ones((d,)),
+                    "attn": init_attention(k, cfg),
+                    "ln2": jnp.ones((d,)),
+                    "moe": init_moe(jax.random.fold_in(k, 1), d, cfg.d_ff, cfg.n_experts),
+                }
+                for k in keys
+            ]
+        )
+        return {"layers": layers}
+    if fam == "ssm":
+        keys = jax.random.split(key, cfg.n_layers)
+        layers = _stack(
+            [
+                {"ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)), "rwkv": init_rwkv6_layer(k, cfg)}
+                for k in keys
+            ]
+        )
+        return {"layers": layers}
+    if fam == "hybrid":
+        n_groups, per_group, tail = _zamba2_layout(cfg)
+        kg, kt, ka = jax.random.split(key, 3)
+        group_keys = jax.random.split(kg, n_groups * per_group)
+        groups = _stack(
+            [
+                _stack(
+                    [
+                        {"ln": jnp.ones((d,)), "mamba": init_mamba2_layer(k, cfg)}
+                        for k in group_keys[g * per_group : (g + 1) * per_group]
+                    ]
+                )
+                for g in range(n_groups)
+            ]
+        )
+        tail_layers = (
+            _stack(
+                [
+                    {"ln": jnp.ones((d,)), "mamba": init_mamba2_layer(k, cfg)}
+                    for k in jax.random.split(kt, tail)
+                ]
+            )
+            if tail
+            else None
+        )
+        shared = {
+            "ln1": jnp.ones((d,)),
+            "attn": init_attention(ka, cfg),
+            "ln2": jnp.ones((d,)),
+            "ffn": init_ffn(jax.random.fold_in(ka, 1), d, cfg.d_ff, cfg.ffn_variant),
+        }
+        return {"groups": groups, "tail": tail_layers, "shared": shared}
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _attn_block(layer, h, cfg, return_cache=False):
+    a_in = _block_input(rmsnorm(h, layer["ln1"].astype(jnp.float32), cfg.rmsnorm_eps))
+    if return_cache:
+        attn_out, kv = attention_forward(layer["attn"], a_in, cfg, return_cache=True)
+    else:
+        attn_out, kv = attention_forward(layer["attn"], a_in, cfg), None
+    h = _boundary(h + attn_out)
+    f_in = _block_input(rmsnorm(h, layer["ln2"].astype(jnp.float32), cfg.rmsnorm_eps))
+    if "moe" in layer:
+        out, aux = moe_forward(layer["moe"], f_in, cfg.top_k)
+    else:
+        out, aux = ffn_forward(layer["ffn"], f_in), {}
+    return _boundary(h + out), aux, kv
+
+
+def _rwkv_block(layer, h, state, cfg):
+    x_tm, x_cm, s0 = state
+    tm_in = _block_input(rmsnorm(h, layer["ln1"].astype(jnp.float32), cfg.rmsnorm_eps))
+    y, x_tm_new, s_f = rwkv6_time_mix(layer["rwkv"], tm_in, x_tm, s0, cfg)
+    h = _boundary(h + y)
+    cm_in = _block_input(rmsnorm(h, layer["ln2"].astype(jnp.float32), cfg.rmsnorm_eps))
+    y2, x_cm_new = rwkv6_channel_mix(layer["rwkv"], cm_in, x_cm)
+    return _boundary(h + y2), (x_tm_new, x_cm_new, s_f)
+
+
+def _mamba_block(layer, h, state, cfg):
+    m_in = _block_input(rmsnorm(h, layer["ln"].astype(jnp.float32), cfg.rmsnorm_eps))
+    out, state_new = mamba2_forward(layer["mamba"], m_in, state, cfg)
+    return _boundary(h + out), state_new
+
+
+def forward_blocks(
+    blocks: dict,
+    h: jax.Array,          # (B, S, D)
+    cfg,
+    remat: bool = False,
+    return_cache: bool = False,
+):
+    """Run all layers. Returns (h, aux, cache_or_None)."""
+    fam = cfg.family
+    b, s, d = h.shape
+
+    if fam in ("dense", "audio", "vlm", "moe"):
+
+        def body(carry, layer):
+            hh, lb, zl = carry
+            hh, aux, kv = _attn_block(layer, hh, cfg, return_cache)
+            lb = lb + aux.get("load_balance_loss", 0.0)
+            zl = zl + aux.get("router_z_loss", 0.0)
+            return (hh, lb, zl), kv
+
+        body_fn = _remat(body, remat)
+        (h, lb, zl), kvs = jax.lax.scan(body_fn, (h, 0.0, 0.0), blocks["layers"])
+        aux = {"load_balance_loss": lb / cfg.n_layers, "router_z_loss": zl / cfg.n_layers}
+        cache = None
+        if return_cache:
+            cache = {"k": kvs[0], "v": kvs[1]}  # (L, B, Hkv, S, hd)
+        return h, aux, cache
+
+    if fam == "ssm":
+        hsz, n = d // HEAD_SIZE, HEAD_SIZE
+        state0 = (
+            jnp.zeros((cfg.n_layers, b, d), h.dtype),
+            jnp.zeros((cfg.n_layers, b, d), h.dtype),
+            jnp.zeros((cfg.n_layers, b, hsz, n, n), jnp.float32),
+        )
+
+        def body(hh, inp):
+            layer, st = inp
+            hh, st_new = _rwkv_block(layer, hh, st, cfg)
+            return hh, st_new
+
+        body_fn = _remat(body, remat)
+        h, states = jax.lax.scan(body_fn, h, (blocks["layers"], state0))
+        cache = None
+        if return_cache:
+            cache = {"x_tm": states[0], "x_cm": states[1], "s": states[2]}
+        return h, {}, cache
+
+    if fam == "hybrid":
+        n_groups, per_group, tail = _zamba2_layout(cfg)
+        di, nst, nh = cfg.d_inner, cfg.ssm_state, cfg.d_inner // HEAD_P
+        conv_ch = di + 2 * nst
+
+        def mamba_scan(hh, layers, n_l):
+            st0 = (
+                jnp.zeros((n_l, b, CONV_K - 1, conv_ch), hh.dtype),
+                jnp.zeros((n_l, b, nh, nst, HEAD_P), jnp.float32),
+            )
+
+            def body(carry, inp):
+                layer, st = inp
+                out, st_new = _mamba_block(layer, carry, st, cfg)
+                return out, st_new
+
+            body_fn = _remat(body, remat)
+            hh, states = jax.lax.scan(body_fn, hh, (layers, st0))
+            return hh, states
+
+        def group_body(hh, group_layers):
+            hh, m_states = mamba_scan(hh, group_layers, per_group)
+            hh, _, kv = _attn_block(blocks["shared"], hh, cfg, return_cache)
+            return hh, (m_states, kv)
+
+        group_fn = _remat(group_body, remat)
+        h, (g_states, g_kvs) = jax.lax.scan(group_fn, h, blocks["groups"])
+        tail_states = None
+        if blocks["tail"] is not None:
+            h, tail_states = mamba_scan(h, blocks["tail"], tail)
+        cache = None
+        if return_cache:
+            cache = {
+                "group_conv": g_states[0], "group_ssm": g_states[1],
+                "tail_conv": tail_states[0] if tail_states else None,
+                "tail_ssm": tail_states[1] if tail_states else None,
+                "k": g_kvs[0] if g_kvs else None,  # (G, B, Hkv, S, hd)
+                "v": g_kvs[1] if g_kvs else None,
+            }
+        return h, {}, cache
+
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against carried state)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16) -> dict:
+    """Zero-initialized decode cache pytree for a given context capacity."""
+    d, hd, hkv = cfg.d_model, cfg.head_dim_, cfg.n_kv_heads
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm", "moe"):
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, hkv, seq_len, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, hkv, seq_len, hd), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if fam == "ssm":
+        h, n = d // HEAD_SIZE, HEAD_SIZE
+        return {
+            "x_tm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "x_cm": jnp.zeros((cfg.n_layers, batch, d), dtype),
+            "s": jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    if fam == "hybrid":
+        n_groups, per_group, tail = _zamba2_layout(cfg)
+        di, nst, nh = cfg.d_inner, cfg.ssm_state, cfg.d_inner // HEAD_P
+        conv_ch = di + 2 * nst
+        out = {
+            "group_conv": jnp.zeros((n_groups, per_group, batch, CONV_K - 1, conv_ch), dtype),
+            "group_ssm": jnp.zeros((n_groups, per_group, batch, nh, nst, HEAD_P), jnp.float32),
+            "k": jnp.zeros((n_groups, batch, hkv, seq_len, hd), dtype),
+            "v": jnp.zeros((n_groups, batch, hkv, seq_len, hd), dtype),
+            "len": jnp.zeros((), jnp.int32),
+        }
+        if tail:
+            out["tail_conv"] = jnp.zeros((tail, batch, CONV_K - 1, conv_ch), dtype)
+            out["tail_ssm"] = jnp.zeros((tail, batch, nh, nst, HEAD_P), jnp.float32)
+        return out
+    raise ValueError(fam)
+
+
+def _attn_block_decode(layer, h, k_cache, v_cache, cache_len, cfg):
+    a_in = rmsnorm(h, layer["ln1"].astype(jnp.float32), cfg.rmsnorm_eps)
+    attn_out, k_new, v_new = decode_attention(
+        layer["attn"], a_in, k_cache, v_cache, cache_len, cfg
+    )
+    h = h + attn_out
+    f_in = rmsnorm(h, layer["ln2"].astype(jnp.float32), cfg.rmsnorm_eps)
+    if "moe" in layer:
+        out, _ = moe_forward(layer["moe"], f_in, cfg.top_k)
+    else:
+        out = ffn_forward(layer["ffn"], f_in)
+    return h + out, k_new, v_new
+
+
+def decode_blocks(blocks: dict, h: jax.Array, cache: dict, cfg):
+    """One-token step. h: (B, 1, D). Returns (h, new_cache)."""
+    fam = cfg.family
+    cache_len = cache["len"]
+
+    if fam in ("dense", "audio", "vlm", "moe"):
+
+        def body(hh, inp):
+            layer, k_c, v_c = inp
+            hh, k_n, v_n = _attn_block_decode(layer, hh, k_c, v_c, cache_len, cfg)
+            return hh, (k_n, v_n)
+
+        h, (k_all, v_all) = jax.lax.scan(body, h, (blocks["layers"], cache["k"], cache["v"]))
+        return h, {"k": k_all, "v": v_all, "len": cache_len + 1}
+
+    if fam == "ssm":
+
+        def body(hh, inp):
+            layer, x_tm, x_cm, s0 = inp
+            tm_in = rmsnorm(hh, layer["ln1"].astype(jnp.float32), cfg.rmsnorm_eps)
+            y, x_tm_n, s_n = rwkv6_time_mix_decode(
+                layer["rwkv"], tm_in, x_tm.astype(tm_in.dtype), s0, cfg
+            )
+            hh = hh + y.astype(hh.dtype)
+            cm_in = rmsnorm(hh, layer["ln2"].astype(jnp.float32), cfg.rmsnorm_eps)
+            y2, x_cm_n = rwkv6_channel_mix_decode(
+                layer["rwkv"], cm_in, x_cm.astype(cm_in.dtype)
+            )
+            return hh + y2.astype(hh.dtype), (
+                x_tm_n.astype(x_tm.dtype), x_cm_n.astype(x_cm.dtype), s_n
+            )
+
+        h, (x_tm, x_cm, s) = jax.lax.scan(
+            body, h, (blocks["layers"], cache["x_tm"], cache["x_cm"], cache["s"])
+        )
+        return h, {"x_tm": x_tm, "x_cm": x_cm, "s": s, "len": cache_len + 1}
+
+    if fam == "hybrid":
+        n_groups, per_group, tail = _zamba2_layout(cfg)
+
+        def mamba_body(hh, inp):
+            layer, conv_st, ssm_st = inp
+            m_in = rmsnorm(hh, layer["ln"].astype(jnp.float32), cfg.rmsnorm_eps)
+            out, (conv_n, ssm_n) = mamba2_decode_step(
+                layer["mamba"], m_in, (conv_st, ssm_st), cfg
+            )
+            return hh + out.astype(hh.dtype), (conv_n.astype(conv_st.dtype), ssm_n)
+
+        def group_body(hh, inp):
+            layers, conv_st, ssm_st, k_c, v_c = inp
+            hh, (conv_n, ssm_n) = jax.lax.scan(mamba_body, hh, (layers, conv_st, ssm_st))
+            hh, k_n, v_n = _attn_block_decode(blocks["shared"], hh, k_c, v_c, cache_len, cfg)
+            return hh, (conv_n, ssm_n, k_n, v_n)
+
+        h, (g_conv, g_ssm, k_all, v_all) = jax.lax.scan(
+            group_body, h,
+            (blocks["groups"], cache["group_conv"], cache["group_ssm"], cache["k"], cache["v"]),
+        )
+        new_cache = {
+            "group_conv": g_conv, "group_ssm": g_ssm,
+            "k": k_all, "v": v_all, "len": cache_len + 1,
+        }
+        if blocks["tail"] is not None:
+            h, (t_conv, t_ssm) = jax.lax.scan(
+                mamba_body, h, (blocks["tail"], cache["tail_conv"], cache["tail_ssm"])
+            )
+            new_cache["tail_conv"] = t_conv
+            new_cache["tail_ssm"] = t_ssm
+        return h, new_cache
+
+    raise ValueError(fam)

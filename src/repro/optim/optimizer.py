@@ -1,0 +1,147 @@
+"""Optimizers in pure JAX (no external deps): AdamW, SGD-momentum, Lion.
+
+Small, pytree-generic, and shard-transparent: optimizer state mirrors the
+parameter pytree, so under pjit the moments inherit the params' sharding
+(ZeRO-style: FSDP-sharded params => FSDP-sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "adamw",
+    "sgd",
+    "lion",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]
+
+Pytree = Any
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x)) for x in jax.tree.leaves(tree) if x is not None]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: None if g is None else g * scale, grads,
+                        is_leaf=lambda x: x is None), norm
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda p, u: p if u is None else p + u, params, updates,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def _zeros_like_tree(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: None if p is None else jnp.zeros_like(p), params,
+                        is_leaf=lambda x: x is None)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, params=None,
+          lr_schedule: Callable | None = None):
+    """Returns (update_fn, init_state). update_fn(grads, state, params, step)."""
+    state = None
+    if params is not None:
+        state = {"mu": _zeros_like_tree(params), "nu": _zeros_like_tree(params)}
+
+    def update_fn(grads, state, params, step):
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        cur_lr = lr_schedule(step_f) if lr_schedule is not None else lr
+
+        def upd(g, mu, nu, p):
+            if g is None:
+                return None, None, None
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            mu_hat = mu / (1 - b1**step_f)
+            nu_hat = nu / (1 - b2**step_f)
+            u = -cur_lr * (mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * p)
+            return u, mu, nu
+
+        flat_g, treedef = jax.tree.flatten(grads, is_leaf=lambda x: x is None)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "mu": treedef.unflatten([o[1] for o in out]),
+            "nu": treedef.unflatten([o[2] for o in out]),
+        }
+        return updates, new_state
+
+    return update_fn, state
+
+
+def sgd(lr=1e-2, momentum=0.9, nesterov=False, params=None):
+    state = _zeros_like_tree(params) if params is not None else None
+
+    def update_fn(grads, state, params, step):
+        def upd(g, v):
+            if g is None:
+                return None, None
+            v = momentum * v + g
+            u = -(lr * (g + momentum * v)) if nesterov else -(lr * v)
+            return u, v
+
+        flat_g, treedef = jax.tree.flatten(grads, is_leaf=lambda x: x is None)
+        flat_v = treedef.flatten_up_to(state)
+        out = [upd(g, v) for g, v in zip(flat_g, flat_v)]
+        return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+            [o[1] for o in out]
+        )
+
+    return update_fn, state
+
+
+def lion(lr=1e-4, b1=0.9, b2=0.99, weight_decay=0.0, params=None):
+    state = _zeros_like_tree(params) if params is not None else None
+
+    def update_fn(grads, state, params, step):
+        def upd(g, m, p):
+            if g is None:
+                return None, None
+            u = -lr * (jnp.sign(b1 * m + (1 - b1) * g) + weight_decay * p)
+            m = b2 * m + (1 - b2) * g
+            return u, m
+
+        flat_g, treedef = jax.tree.flatten(grads, is_leaf=lambda x: x is None)
+        flat_m = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+            [o[1] for o in out]
+        )
+
+    return update_fn, state
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        warm = base_lr * step / max(warmup, 1)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return fn

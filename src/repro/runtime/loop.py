@@ -1,0 +1,93 @@
+"""Fault-tolerant training loop: checkpoint/restart + watchdog + stragglers.
+
+The composition point for the runtime substrate: a crash (or watchdog
+timeout) inside ``run()`` restores the latest checkpoint and REPLAYS from
+that step — deterministic because the data pipeline is a pure function of
+the step index.  This is the control loop ``launch/train.py`` drives.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Optional
+
+from ..checkpoint.checkpoint import Checkpointer
+from .fault_tolerance import RestartableFailure, StepWatchdog, StragglerDetector
+
+log = logging.getLogger("repro.loop")
+
+__all__ = ["LoopConfig", "TrainingLoop"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    checkpoint_every: int = 100
+    watchdog_deadline_s: float = 3600.0
+    max_restarts: int = 3
+    log_every: int = 10
+
+
+class TrainingLoop:
+    def __init__(
+        self,
+        step_fn: Callable,        # (params, opt_state, step, batch) -> (p, o, metrics)
+        batch_fn: Callable,       # step -> batch (pure)
+        checkpointer: Checkpointer,
+        cfg: LoopConfig,
+        metrics_cb: Optional[Callable] = None,
+    ):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.ckpt = checkpointer
+        self.cfg = cfg
+        self.metrics_cb = metrics_cb
+        self.watchdog = StepWatchdog(cfg.watchdog_deadline_s)
+        self.stragglers = StragglerDetector()
+        self.restarts = 0
+
+    def run(self, params, opt_state, start_step: int = 0):
+        step = start_step
+        # Resume from latest checkpoint if one exists past start_step.
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest > step:
+            log.info("resuming from checkpoint step %d", latest)
+            params, opt_state = self.ckpt.restore(latest, (params, opt_state))
+            step = latest
+
+        history = []
+        while step < self.cfg.total_steps:
+            try:
+                batch = self.batch_fn(step)
+                self.watchdog.arm()
+                t0 = time.monotonic()
+                params, opt_state, metrics = self.step_fn(params, opt_state, step, batch)
+                # Block on the loss so watchdog timing covers real execution.
+                loss = float(metrics["loss"])
+                dt = time.monotonic() - t0
+                self.watchdog.disarm()
+                self.watchdog.check()
+                if self.stragglers.record(dt):
+                    log.warning("straggler step %d: %.3fs", step, dt)
+                if step % self.cfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
+                if self.metrics_cb:
+                    self.metrics_cb(step, metrics, dt)
+                history.append(loss)
+                step += 1
+                if step % self.cfg.checkpoint_every == 0 or step == self.cfg.total_steps:
+                    self.ckpt.save_async(step, (params, opt_state))
+            except (RestartableFailure, RuntimeError) as e:
+                self.watchdog.disarm()
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                log.warning("failure at step %d (%s); restoring step %s", step, e, latest)
+                if latest is None:
+                    raise
+                params, opt_state = self.ckpt.restore(latest, (params, opt_state))
+                step = latest
+        self.ckpt.wait()
+        return params, opt_state, history

@@ -1,0 +1,294 @@
+"""Partition specs: FSDP x TP x EP (+ SP for long-context decode).
+
+Mesh axes (launch/mesh.py):
+  single-pod : ('data', 'model') = (16, 16)
+  multi-pod  : ('pod', 'data', 'model') = (2, 16, 16)
+
+Policy (DESIGN.md §5):
+  * params/optimizer state: FSDP over 'data' + TP over 'model';
+    REPLICATED over 'pod' (hierarchical DP — cross-pod traffic is the
+    gradient all-reduce only, which the int8 compressor targets).
+  * batch: sharded over ('pod', 'data') ['data' when single-pod].
+  * MoE experts: expert axis over 'model' (EP).
+  * decode KV caches: batch over dp axes, kv-heads over 'model';
+    long_500k (batch=1): sequence over 'data' (SP) instead.
+
+Specs are assigned by leaf *path name*, then left-padded with None to the
+leaf's rank (covers layer stacking (L, ...) and zamba2's (G, P, ...)).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from . import flags
+
+__all__ = [
+    "param_specs",
+    "opt_specs",
+    "batch_specs",
+    "decode_cache_specs",
+    "logits_spec",
+    "dp_axes",
+    "set_activation_mesh",
+    "constrain",
+]
+
+Pytree = Any
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints.
+#
+# XLA's sharding propagation gives up at a few points (the embedding gather,
+# while-loop carries) and silently replicates everything downstream — the
+# first dry-run of this repo showed 154 GiB/device temps from exactly that.
+# The fix is the standard MaxText practice: pin activation shardings at
+# layer boundaries.  ``set_activation_mesh`` arms the constraints (launchers
+# only — unit tests on 1 device leave them off and ``constrain`` is a no-op).
+# ---------------------------------------------------------------------------
+_ACT = {"mesh": None, "dp": ("data",)}
+
+
+def set_activation_mesh(mesh, multi_pod: bool = False, batch_sharded: bool = True):
+    _ACT["mesh"] = mesh
+    _ACT["dp"] = dp_axes(multi_pod) if batch_sharded else None
+
+
+def constrain(x, *dims):
+    """Pin x's sharding. dims entries: 'dp' | axis name | None.
+
+    Axes that do not evenly divide the corresponding dim are dropped
+    (e.g. 8 KV heads on a 16-way model axis -> replicated KV, the
+    standard Megatron GQA fallback).
+    """
+    mesh = _ACT["mesh"]
+    if mesh is None or x is None:
+        return x
+    spec = []
+    dp_only = flags.flag("dp_only")
+    for i, d in enumerate(dims):
+        if d == "dp":
+            d = _ACT["dp"]
+        elif dp_only and d == "model":
+            d = None  # model axis is data-parallel in dp_only mode
+        elif isinstance(d, tuple):  # e.g. ("dp", "model") — flatten dp
+            flat = []
+            for a in d:
+                if a == "dp":
+                    flat.extend(_ACT["dp"] or ())
+                elif a is not None:
+                    flat.append(a)
+            d = tuple(flat) or None
+        if d is not None:
+            axes = d if isinstance(d, tuple) else (d,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if x.shape[i] % size != 0:
+                d = None
+        spec.append(d)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec))
+    )
+
+
+def axis_divides(n: int, *axes) -> bool:
+    """True if n is divisible by the (armed) mesh axes' total size."""
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return True
+    size = 1
+    for a in axes:
+        for ax in (_ACT["dp"] or ()) if a == "dp" else (a,):
+            size *= mesh.shape[ax]
+    return n % size == 0
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def validate_spec(spec: P, shape: tuple, mesh) -> P:
+    """Drop/relocate axes so every sharded dim divides evenly.
+
+    A non-dividing axis is moved to the first OTHER unsharded dim that it
+    divides (e.g. MoE expert dim 40 on a 16-way axis -> shard the expert
+    d_ff instead: EP degrades to per-expert TP); if none exists the axis is
+    dropped (that dim replicates).
+    """
+    if mesh is None:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, ax in enumerate(dims):
+        if ax is None:
+            continue
+        if shape[i] % _axis_size(mesh, ax) != 0:
+            dims[i] = None
+            order = list(range(i + 1, len(shape))) + list(range(0, i))
+            for j in order:
+                if dims[j] is None and shape[j] % _axis_size(mesh, ax) == 0 and shape[j] > 1:
+                    dims[j] = ax
+                    break
+    return P(*dims)
+
+
+def validate_tree(specs: Pytree, abstract: Pytree, mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s, a: validate_spec(s, a.shape, mesh) if a is not None else s,
+        specs, abstract,
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+
+
+def dp_axes(multi_pod: bool):
+    if flags.flag("dp_only"):
+        # no TP: the model axis joins data parallelism
+        return ("pod", "data", "model") if multi_pod else ("data", "model")
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+# trailing-dims spec per leaf name; padded left with None to leaf rank.
+_TRAILING = {
+    # top level
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    "final_norm": (None,),
+    # norms / small vectors
+    "ln1": (None,), "ln2": (None,), "ln": (None,),
+    "norm_w": (None,), "ln_x": (None,),
+    "q_norm": (None,), "k_norm": (None,),
+    # attention
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # dense ffn
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # moe (E, D, F) / (E, F, D): experts over model (EP), D over data
+    "w_router": ("data", None),
+    "moe.w_gate": ("model", "data", None),
+    "moe.w_up": ("model", "data", None),
+    "moe.w_down": ("model", None, "data"),
+    # rwkv6
+    "wr": ("data", "model"), "wg": ("data", "model"),
+    "cm_wk": ("data", "model"), "cm_wv": ("model", "data"),
+    "cm_wr": ("data", "model"),
+    "tm_w1": (None, None), "tm_w2": (None, None, None),
+    "td_w1": (None, None), "td_w2": (None, None),
+    "mu_x": (None,), "mu_rkvwg": (None, None),
+    "time_decay": (None,), "bonus_u": (None,),
+    "cm_mu_k": (None,), "cm_mu_r": (None,),
+    # mamba2
+    "w_in": ("data", "model"), "w_out": ("model", "data"),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "a_log": (None,), "dt_bias": (None,), "d_skip": (None,),
+}
+
+
+def _leaf_spec(path: tuple, leaf) -> P:
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    joined = ".".join(str(n) for n in names)
+    key = names[-1] if names else ""
+    trailing = None
+    if ("moe" in joined or "w_router" in joined) and f"moe.{key}" in _TRAILING:
+        trailing = _TRAILING[f"moe.{key}"]
+    elif key in _TRAILING:
+        trailing = _TRAILING[key]
+    if trailing is None:
+        return P()  # replicate by default
+    rank = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    pad = rank - len(trailing)
+    if pad < 0:  # leaf smaller than rule (e.g. unstacked shared block)
+        trailing = trailing[-rank:] if rank else ()
+        pad = 0
+    return P(*((None,) * pad + tuple(trailing)))
+
+
+def _leaf_spec_dp_only(path, leaf) -> P:
+    """Pure FSDP: shard dim 0 of every >=2D weight over (data, model)."""
+    rank = getattr(leaf, "ndim", 0)
+    if rank < 2:
+        return P()
+    # layer-stacked leaves: shard the first non-layer dim
+    spec = [None] * rank
+    spec[rank - 2] = ("data", "model")
+    return P(*spec)
+
+
+def _drop_data(spec: P) -> P:
+    """serve_tp: params live TP-only (no FSDP axis) — decode must not
+    all-gather params over 'data' on every token."""
+    return P(*(None if d == "data" else d for d in spec))
+
+
+def param_specs(params_abstract: Pytree) -> Pytree:
+    if flags.flag("dp_only"):
+        return jax.tree_util.tree_map_with_path(_leaf_spec_dp_only, params_abstract)
+    tree = jax.tree_util.tree_map_with_path(_leaf_spec, params_abstract)
+    if flags.flag("serve_tp"):
+        tree = jax.tree.map(_drop_data, tree,
+                            is_leaf=lambda x: isinstance(x, P))
+    return tree
+
+
+def opt_specs(opt_abstract: Pytree) -> Pytree:
+    """Optimizer moments mirror parameter sharding (ZeRO)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path[2:] if len(path) > 2 else path, leaf),
+        opt_abstract,
+    )
+
+
+def batch_specs(batch_abstract: dict, multi_pod: bool) -> dict:
+    dp = dp_axes(multi_pod)
+    out = {}
+    for k, v in batch_abstract.items():
+        b = v.shape[0] if v.shape else 0
+        bspec = dp if b > 1 else None
+        out[k] = P(bspec, *((None,) * (len(v.shape) - 1)))
+    return out
+
+
+def decode_cache_specs(cache_abstract: dict, multi_pod: bool, batch: int) -> dict:
+    """KV/state cache shardings; SP over sequence when batch == 1."""
+    dp = dp_axes(multi_pod)
+    bspec = dp if batch > 1 else None
+    seq_spec = None if batch > 1 else "data"  # SP for long-context decode
+    # dp_only folds 'model' into the data axes — don't shard heads on it too
+    model = None if flags.flag("dp_only") else "model"
+    specs = {}
+    for k, v in cache_abstract.items():
+        if k == "len":
+            specs[k] = P()
+        elif k in ("k", "v"):
+            # (L_or_G, B, Hkv, S, hd)
+            specs[k] = P(None, bspec, model, seq_spec, None)
+        elif k in ("x_tm", "x_cm"):
+            specs[k] = P(None, bspec, model)
+        elif k == "s":
+            specs[k] = P(None, bspec, model, None, None)
+        elif k in ("group_conv",):
+            specs[k] = P(None, None, bspec, None, model)
+        elif k in ("group_ssm",):
+            specs[k] = P(None, None, bspec, model, None, None)
+        elif k in ("tail_conv",):
+            specs[k] = P(None, bspec, None, model)
+        elif k in ("tail_ssm",):
+            specs[k] = P(None, bspec, model, None, None)
+        else:
+            specs[k] = P()
+    return specs
+
+
+def logits_spec(multi_pod: bool, batch: int) -> P:
+    dp = dp_axes(multi_pod)
+    model = None if flags.flag("dp_only") else "model"
+    return P(dp if batch > 1 else None, model)

@@ -1,0 +1,109 @@
+"""Synthetic DVS event streams (stand-ins for IBM DVS Gestures / DSEC-flow).
+
+The real datasets are not redistributable offline (DESIGN.md §7), so we
+synthesize event-camera-like data with the same statistical structure:
+
+  * Gesture-like streams: a bright oriented edge sweeping across the frame
+    with class-dependent direction/curvature; ON/OFF polarity channels;
+    per-pixel Bernoulli events where intensity changes — sparsity in the
+    80-99 % band like the real sensor.
+  * Flow-like streams: a random dot/texture field translating with a
+    constant (per-sample) velocity; ground-truth flow = that velocity.
+    Events fire where the pattern edge crosses a pixel.
+
+Everything is deterministic given the seed, making tests and the Fig 16
+trade-off reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GestureBatch", "FlowBatch", "make_gesture_batch", "make_flow_batch"]
+
+N_GESTURE_CLASSES = 11  # IBM DVS gestures has 11 classes
+
+
+@dataclasses.dataclass
+class GestureBatch:
+    events: jax.Array  # (T, B, H, W, 2) binary
+    labels: jax.Array  # (B,) int32
+
+
+@dataclasses.dataclass
+class FlowBatch:
+    events: jax.Array  # (T, B, H, W, 2) binary
+    flow: jax.Array    # (B, H, W, 2) ground-truth (vx, vy), pixels/timestep
+
+
+def _moving_edge_frame(t, hw, angle, speed, phase, key, noise=0.002):
+    """One timestep of ON/OFF events from an edge sweeping at ``angle``."""
+    h, w = hw
+    yy, xx = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    # Signed distance to a moving line.
+    c, s = jnp.cos(angle), jnp.sin(angle)
+    pos = (t * speed + phase) % (h + w)
+    d = c * xx + s * yy - pos
+    band = jnp.abs(d) < 1.5
+    on = band & (d >= 0)
+    off = band & (d < 0)
+    k1, k2 = jax.random.split(key)
+    noise_on = jax.random.bernoulli(k1, noise, (h, w))
+    noise_off = jax.random.bernoulli(k2, noise, (h, w))
+    return jnp.stack([on | noise_on, off | noise_off], axis=-1).astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("batch", "timesteps", "hw"))
+def make_gesture_batch(
+    key: jax.Array, batch: int = 16, timesteps: int = 20, hw: tuple = (64, 64)
+):
+    """Class k sweeps an edge at angle ~ 2*pi*k/11 with class-coded speed."""
+    k_lbl, k_phase, k_noise = jax.random.split(key, 3)
+    labels = jax.random.randint(k_lbl, (batch,), 0, N_GESTURE_CLASSES)
+    angles = 2.0 * jnp.pi * labels / N_GESTURE_CLASSES
+    speeds = 1.5 + 0.5 * (labels % 3)
+    phases = jax.random.uniform(k_phase, (batch,), minval=0.0, maxval=20.0)
+
+    def per_t(t):
+        keys = jax.random.split(jax.random.fold_in(k_noise, t), batch)
+        return jax.vmap(
+            lambda a, sp, ph, kk: _moving_edge_frame(t, hw, a, sp, ph, kk)
+        )(angles, speeds, phases, keys)
+
+    events = jax.vmap(per_t)(jnp.arange(timesteps))
+    return events, labels
+
+
+@partial(jax.jit, static_argnames=("batch", "timesteps", "hw", "density"))
+def make_flow_batch(
+    key: jax.Array,
+    batch: int = 4,
+    timesteps: int = 10,
+    hw: tuple = (288, 384),
+    density: float = 0.05,
+):
+    """Random texture translating at a per-sample velocity; GT flow = v."""
+    h, w = hw
+    k_tex, k_vel = jax.random.split(key)
+    # Static random texture per sample (binary dots).
+    tex = jax.random.bernoulli(k_tex, density, (batch, h, w)).astype(jnp.float32)
+    vel = jax.random.uniform(k_vel, (batch, 2), minval=-2.0, maxval=2.0)
+
+    def shift(img, dxy):
+        # Integer roll (events are discrete); subpixel handled by time.
+        dx, dy = jnp.round(dxy[0]).astype(jnp.int32), jnp.round(dxy[1]).astype(jnp.int32)
+        return jnp.roll(jnp.roll(img, dy, axis=0), dx, axis=1)
+
+    def per_t(t):
+        cur = jax.vmap(shift)(tex, vel * t)
+        prev = jax.vmap(shift)(tex, vel * (t - 1))
+        on = jnp.clip(cur - prev, 0, 1)
+        off = jnp.clip(prev - cur, 0, 1)
+        return jnp.stack([on, off], axis=-1)
+
+    events = jax.vmap(per_t)(jnp.arange(timesteps))
+    flow = jnp.broadcast_to(vel[:, None, None, :], (batch, h, w, 2))
+    return events, flow

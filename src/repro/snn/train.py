@@ -1,0 +1,96 @@
+"""Surrogate-gradient BPTT training for the paper's SNNs (QAT at 4/6/8 bit).
+
+The accelerator needs no modified training methodology (Table III row
+"Modified Training: No") — networks are trained offline with standard
+surrogate-gradient BPTT + quantization-aware weights, then deployed
+bit-exactly (digital CIM).  This module is that offline trainer:
+
+  loss = cross-entropy over rate-coded output spikes   (gesture)
+         average endpoint error (AEE) on final Vmem    (optical flow)
+
+The spike nonlinearity's triangle surrogate lives in ``core.neuron``; the
+weight fake-quant STE in ``core.quant``; both are exercised here through
+``core.network.run_snn`` so training and deployment share one definition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.network import SNNSpec, init_params, run_snn
+from ..core.quant import QuantSpec
+from ..optim.optimizer import adamw, apply_updates, clip_by_global_norm
+
+__all__ = ["TrainConfig", "TrainState", "init_train_state", "train_step", "evaluate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    weight_bits: int = 4
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    grad_clip: float = 1.0
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: list
+    opt_state: dict
+    step: int
+
+
+def init_train_state(key, spec: SNNSpec, cfg: TrainConfig) -> TrainState:
+    params = init_params(key, spec)
+    _, opt_state = adamw(lr=cfg.lr, weight_decay=cfg.weight_decay, params=params)
+    return TrainState(params=params, opt_state=opt_state, step=0)
+
+
+def _loss_fn(params, batch, spec: SNNSpec, qspec: QuantSpec):
+    inputs, target = batch
+    out, _ = run_snn(params, inputs, spec, qspec, mode="train")
+    if spec.readout == "rate":
+        logits = out  # spike counts as logits (rate code)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, target[:, None], axis=1))
+        acc = jnp.mean(jnp.argmax(logits, axis=-1) == target)
+        return loss, {"loss": loss, "accuracy": acc}
+    # Optical flow: average endpoint error on the Vmem readout.
+    aee = jnp.mean(jnp.linalg.norm(out - target, axis=-1))
+    return aee, {"loss": aee, "aee": aee}
+
+
+@partial(jax.jit, static_argnames=("spec", "weight_bits", "lr", "weight_decay", "grad_clip"))
+def _train_step_impl(params, opt_state, step, batch, spec, weight_bits, lr,
+                     weight_decay, grad_clip):
+    qspec = QuantSpec(weight_bits)
+    (loss, metrics), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+        params, batch, spec, qspec
+    )
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    update_fn, _ = adamw(lr=lr, weight_decay=weight_decay, params=params)
+    updates, opt_state = update_fn(grads, opt_state, params, step)
+    params = apply_updates(params, updates)
+    metrics["grad_norm"] = gnorm
+    return params, opt_state, metrics
+
+
+def train_step(state: TrainState, batch, spec: SNNSpec, cfg: TrainConfig):
+    params, opt_state, metrics = _train_step_impl(
+        state.params, state.opt_state, state.step, batch, spec,
+        cfg.weight_bits, cfg.lr, cfg.weight_decay, cfg.grad_clip,
+    )
+    return TrainState(params, opt_state, state.step + 1), metrics
+
+
+def evaluate(params, batches, spec: SNNSpec, cfg: TrainConfig,
+             metric: str = "accuracy") -> float:
+    qspec = QuantSpec(cfg.weight_bits)
+    vals = []
+    for batch in batches:
+        _, m = _loss_fn(params, batch, spec, qspec)
+        vals.append(float(m[metric]))
+    return sum(vals) / len(vals)

@@ -1,0 +1,142 @@
+"""Tests: energy model calibration vs Table I (C9), S2A (C4), zero-skip (C3),
+pipeline DES (C7)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy, s2a, zero_skip
+from repro.core.energy import HW, TABLE1_PAPER, gops, power_mw, tops_per_watt
+from repro.core.pipeline import PipelineConfig, simulate_pipeline
+from repro.core.s2a import S2AConfig, simulate_s2a, switch_count_batched
+
+
+class TestTable1Calibration:
+    """The reproduction's headline claim: Table I within tolerance."""
+
+    @pytest.mark.parametrize("hw,key", [(HW(50e6, 0.9), "50MHz_0.9V"),
+                                        (HW(150e6, 1.0), "150MHz_1.0V")])
+    def test_power(self, hw, key):
+        want = TABLE1_PAPER[key]["power_mw"]
+        assert power_mw(hw) == pytest.approx(want, rel=0.02)
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    @pytest.mark.parametrize("hw,key", [(HW(50e6, 0.9), "50MHz_0.9V"),
+                                        (HW(150e6, 1.0), "150MHz_1.0V")])
+    def test_throughput(self, bits, hw, key):
+        want = TABLE1_PAPER[key]["gops"][bits]
+        assert gops(0.95, bits, hw.freq_hz) == pytest.approx(want, rel=0.01)
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    @pytest.mark.parametrize("hw,key", [(HW(50e6, 0.9), "50MHz_0.9V"),
+                                        (HW(150e6, 1.0), "150MHz_1.0V")])
+    def test_efficiency(self, bits, hw, key):
+        want = TABLE1_PAPER[key]["topsw"][bits]
+        assert tops_per_watt(0.95, bits, hw) == pytest.approx(want, rel=0.02)
+
+    def test_fig17_sparsity_2x_claim(self):
+        """~2x throughput from 80% -> 95% sparsity at 4-bit (Sec III)."""
+        ratio = gops(0.95, 4) / gops(0.80, 4)
+        assert 1.8 < ratio < 2.6
+
+    def test_precision_scaling_is_48_over_wb(self):
+        assert gops(0.9, 4) / gops(0.9, 8) == pytest.approx(2.0)
+        assert gops(0.9, 4) / gops(0.9, 6) == pytest.approx(1.5)
+
+    def test_fig10_switching_amortization(self):
+        """1.5x energy/op reduction at batch 15 vs every-cycle switching."""
+        ratio = energy.energy_per_op_batched(1) / energy.energy_per_op_batched(15)
+        assert ratio == pytest.approx(1.5, rel=0.01)
+        # diminishing returns beyond depth 16
+        gain = energy.energy_per_op_batched(16) / energy.energy_per_op_batched(64)
+        assert gain < 1.03
+
+    def test_fig14_breakdown(self):
+        """CIM macros dominate; total drops >50%... (>2x) from 75 -> 95%."""
+        e75 = energy.chunk_energy_breakdown_nj(0.75)
+        e95 = energy.chunk_energy_breakdown_nj(0.95)
+        assert max(e95, key=e95.get) == "cim_macros"
+        assert max(e75, key=e75.get) == "cim_macros"
+        assert sum(e75.values()) > 1.5 * sum(e95.values())
+        # data movement is a small fraction (in-memory compute claim)
+        assert e95["data_movement"] / sum(e95.values()) < 0.15
+
+
+class TestS2A:
+    def test_empty_map(self):
+        st_ = simulate_s2a(np.zeros((128, 16), np.int8))
+        assert st_.row_ops == 0 and st_.switches == 0
+
+    def test_two_ops_per_spike(self):
+        rng = np.random.default_rng(0)
+        m = (rng.random((128, 16)) < 0.1).astype(np.int8)
+        st_ = simulate_s2a(m)
+        assert st_.row_ops == 2 * st_.spikes
+
+    def test_pingpong_amortizes_switches(self):
+        """Ping-pong FIFO must get mean run length near the FIFO depth."""
+        rng = np.random.default_rng(1)
+        m = (rng.random((128, 16)) < 0.2).astype(np.int8)
+        st_ = simulate_s2a(m, S2AConfig(fifo_depth=16))
+        naive_switches = 2 * st_.spikes - 1
+        assert st_.switches < naive_switches / 8
+        assert st_.mean_run_length > 10
+
+    def test_closed_form_switches(self):
+        assert switch_count_batched(8, 1) == 15
+        assert switch_count_batched(8, 16) == 0
+
+    @given(st.floats(min_value=0.01, max_value=0.5), st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_all_spikes_processed_property(self, density, seed):
+        rng = np.random.default_rng(seed)
+        m = (rng.random((64, 16)) < density).astype(np.int8)
+        st_ = simulate_s2a(m)
+        assert st_.spikes == int(m.sum())
+        assert st_.row_ops == 2 * st_.spikes  # every spike: even + odd
+
+
+class TestZeroSkip:
+    def test_fig4_breakeven(self):
+        """AER break-even for the optical-flow input layer ~94.7%."""
+        n = 288 * 384 * 2
+        brk = zero_skip.aer_breakeven_sparsity(n, framing_bits=1)
+        assert 0.94 < brk < 0.96
+
+    def test_aer_overhead_monotone(self):
+        n = 64 * 64 * 2
+        assert zero_skip.aer_overhead(n, 0.5) > zero_skip.aer_overhead(n, 0.99)
+
+    def test_tile_skip(self):
+        m = np.zeros((128, 128), np.int8)
+        m[:8, :8] = 1
+        frac = zero_skip.tile_skip_fraction(m, (8, 8))
+        assert frac == pytest.approx(1 - 1 / 256)
+
+
+class TestPipelineDES:
+    def test_async_beats_sync(self):
+        """Fig 13's motivation: handshake beats worst-case-sync pipeline."""
+        rng = np.random.default_rng(0)
+        cc = rng.integers(50, 800, (20, 9))  # high sparsity variance
+        res = simulate_pipeline(cc)
+        assert res.speedup_vs_sync > 1.1
+
+    def test_uniform_work_near_sync(self):
+        cc = np.full((10, 9), 300)
+        res = simulate_pipeline(cc)
+        assert res.makespan <= res.sync_makespan
+
+    def test_makespan_lower_bound(self):
+        cc = np.full((5, 9), 100)
+        res = simulate_pipeline(cc)
+        # at least the critical path of one timestep
+        assert res.makespan >= 9 * 100
+
+    @given(st.integers(1, 12), st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_monotone_in_timesteps(self, t, seed):
+        rng = np.random.default_rng(seed)
+        cc = rng.integers(10, 200, (t + 1, 9))
+        r1 = simulate_pipeline(cc[:t])
+        r2 = simulate_pipeline(cc)
+        assert r2.makespan >= r1.makespan

@@ -1,0 +1,128 @@
+"""Tests: CIM macro semantics (C1) + operating modes (C6) + paper constants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cim_macro, modes
+from repro.core.cim_macro import (
+    CM_COLS,
+    CM_WEIGHT_ROWS,
+    IFSPAD_COLS,
+    IFSPAD_ROWS,
+    NEURON_MACRO_CYCLES,
+    MacroConfig,
+    accumulate,
+    accumulate_sequential,
+    macro_cycles,
+    pack_weight_rows,
+)
+from repro.core.modes import CoreConfig, LayerShape, map_layer
+from repro.core.quant import QuantSpec
+
+
+class TestMacroGeometry:
+    def test_eq3_neuron_cycles(self):
+        assert NEURON_MACRO_CYCLES == 66  # Eq. (3): 2*32 + 2
+
+    def test_eq1_output_neurons_per_macro(self):
+        # Eq. (1): (48/W_b) * 16
+        for bits, want in [(4, 192), (6, 128), (8, 96)]:
+            assert MacroConfig(QuantSpec(bits)).max_output_neurons == want
+
+    def test_pack_rejects_overflow(self):
+        cfg = MacroConfig(QuantSpec(4))
+        with pytest.raises(ValueError):
+            pack_weight_rows(jnp.zeros((129, 12)), cfg)
+        with pytest.raises(ValueError):
+            pack_weight_rows(jnp.zeros((128, 13)), cfg)
+
+
+class TestAccumulate:
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_matches_sequential_no_overflow(self, bits):
+        """Vectorized == silicon-order when no intermediate saturation."""
+        spec = QuantSpec(bits)
+        rng = np.random.default_rng(bits)
+        spikes = (rng.random((IFSPAD_ROWS, IFSPAD_COLS)) < 0.05).astype(np.int8)
+        w = rng.integers(-2, 3, (IFSPAD_ROWS, spec.neurons_per_row)).astype(np.int8)
+        v0 = np.zeros((IFSPAD_COLS, spec.neurons_per_row), np.int32)
+        seq = accumulate_sequential(spikes, w, v0, spec)
+        vec = np.asarray(accumulate(jnp.array(spikes), jnp.array(w), jnp.array(v0), spec))
+        np.testing.assert_array_equal(seq, vec)
+
+    def test_saturation_stays_in_range(self):
+        spec = QuantSpec(4)
+        rng = np.random.default_rng(7)
+        spikes = (rng.random((128, 16)) < 0.5).astype(np.int8)  # dense -> overflow
+        w = rng.integers(spec.w_min, spec.w_max + 1, (128, 12)).astype(np.int8)
+        v0 = np.zeros((16, 12), np.int32)
+        for out in (
+            accumulate_sequential(spikes, w, v0, spec),
+            np.asarray(accumulate(jnp.array(spikes), jnp.array(w), jnp.array(v0), spec)),
+        ):
+            assert out.min() >= spec.v_min and out.max() <= spec.v_max
+
+    @given(st.floats(min_value=0.0, max_value=0.3), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_zero_vmem_when_no_spikes_property(self, density, seed):
+        spec = QuantSpec(4)
+        rng = np.random.default_rng(seed)
+        spikes = (rng.random((128, 16)) < density).astype(np.int8)
+        w = rng.integers(-2, 3, (128, 12)).astype(np.int8)
+        out = np.asarray(
+            accumulate(jnp.array(spikes), jnp.array(w),
+                       jnp.zeros((16, 12), jnp.int32), spec)
+        )
+        # Columns with zero spikes anywhere contribute nothing.
+        empty_cols = spikes.sum(axis=0) == 0
+        assert (out[empty_cols] == 0).all()
+
+    def test_macro_cycles(self):
+        assert macro_cycles(0) == 0
+        assert macro_cycles(10) == 22  # 2 ops/spike + fill
+
+
+class TestModes:
+    def test_paper_cross_checks(self):
+        # Table III footnotes at 4-bit
+        assert modes.max_output_neurons_conv_mode1(QuantSpec(4)) == 576
+        assert modes.max_input_neurons_fc_mode2() == 1152
+
+    def test_mode1_small_fanin(self):
+        core = CoreConfig(QuantSpec(4))
+        m = map_layer(LayerShape.conv(3, 3, 2, 16, 64, 64), core)  # fan-in 18
+        assert m.mode == 1 and m.pipelines == 3
+        assert m.parallel_channels == 36  # Eq. (2): 3 * 12
+
+    def test_mode2_large_fanin(self):
+        core = CoreConfig(QuantSpec(4))
+        m = map_layer(LayerShape.conv(3, 3, 64, 32, 32, 32), core)  # fan-in 576
+        assert m.mode == 2 and m.pipelines == 1
+        assert m.parallel_channels == 12  # Eq. (2): 48/4
+
+    def test_fc_uses_one_vmem_pair(self):
+        core = CoreConfig(QuantSpec(4))
+        m = map_layer(LayerShape.fc(512, 11), core)
+        assert m.vmem_pairs_used == 1
+
+    def test_fanin_beyond_mode2_tiles(self):
+        core = CoreConfig(QuantSpec(4))
+        m = map_layer(LayerShape.fc(3000, 10), core)  # > 1152
+        assert m.fan_in_tiles >= 2
+
+    @pytest.mark.parametrize("bits,chs", [(4, 36), (6, 24), (8, 18)])
+    def test_eq2_mode1_channels(self, bits, chs):
+        core = CoreConfig(QuantSpec(bits))
+        m = map_layer(LayerShape.conv(3, 3, 2, 64, 8, 8), core)
+        assert m.parallel_channels == chs
+
+    def test_paper_network_layers_map(self):
+        """Every layer of both Table II networks must map."""
+        from repro.core.network import gesture_net, optical_flow_net
+
+        core = CoreConfig(QuantSpec(4))
+        for spec in (gesture_net(), optical_flow_net()):
+            for shape in spec.layer_shapes():
+                m = map_layer(shape, core)
+                assert m.total_passes >= 1

@@ -1,0 +1,116 @@
+"""Unit + property tests: quantization (C2) and neuron models (C8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.neuron import NeuronConfig, neuron_step, neuron_step_int, spike_surrogate
+from repro.core.quant import (
+    SUPPORTED_PRECISIONS,
+    QuantSpec,
+    dequantize,
+    quantize,
+    sat_add,
+    ste_quantize,
+)
+
+
+class TestQuantSpec:
+    def test_supported_pairs(self):
+        assert [(s.weight_bits, s.vmem_bits) for s in SUPPORTED_PRECISIONS] == [
+            (4, 7), (6, 11), (8, 15)
+        ]
+
+    def test_vmem_invariant(self):
+        for s in SUPPORTED_PRECISIONS:
+            assert s.vmem_bits == 2 * s.weight_bits - 1
+
+    def test_neurons_per_row(self):
+        # Sec II-E: 48/W_b weights per row -> 12 / 8 / 6
+        assert [s.neurons_per_row for s in SUPPORTED_PRECISIONS] == [12, 8, 6]
+
+    def test_invalid_bits(self):
+        with pytest.raises(ValueError):
+            QuantSpec(5)
+
+    def test_ranges(self):
+        s = QuantSpec(4)
+        assert (s.w_min, s.w_max) == (-8, 7)
+        assert (s.v_min, s.v_max) == (-64, 63)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_roundtrip_error_bound(self, bits):
+        spec = QuantSpec(bits)
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        q, scale = quantize(w, spec)
+        err = jnp.max(jnp.abs(dequantize(q, scale) - w))
+        assert float(err) <= float(scale) / 2 + 1e-6
+
+    def test_quantize_in_range(self):
+        spec = QuantSpec(4)
+        w = jax.random.normal(jax.random.PRNGKey(1), (100,)) * 100
+        q, _ = quantize(w, spec)
+        assert int(q.min()) >= spec.w_min and int(q.max()) <= spec.w_max
+
+    def test_ste_gradient_is_identity(self):
+        g = jax.grad(lambda w: jnp.sum(ste_quantize(w, 4) * 3.0))(jnp.ones((5,)))
+        np.testing.assert_allclose(np.asarray(g), 3.0)
+
+    @given(st.integers(min_value=-64, max_value=63), st.integers(min_value=-8, max_value=7))
+    @settings(max_examples=50, deadline=None)
+    def test_sat_add_stays_in_range(self, v, w):
+        spec = QuantSpec(4)
+        out = int(sat_add(jnp.int32(v), jnp.int32(w), spec))
+        assert spec.v_min <= out <= spec.v_max
+        clamped = max(spec.v_min, min(spec.v_max, v + w))
+        assert out == clamped
+
+
+class TestNeuron:
+    def test_if_hard_reset(self):
+        cfg = NeuronConfig(model="if", reset="hard", threshold=1.0)
+        v, s = neuron_step(jnp.array([0.5, 0.9]), jnp.array([0.6, 0.0]), cfg)
+        np.testing.assert_allclose(np.asarray(s), [1.0, 0.0])
+        np.testing.assert_allclose(np.asarray(v), [0.0, 0.9])
+
+    def test_if_soft_reset_keeps_residual(self):
+        cfg = NeuronConfig(model="if", reset="soft", threshold=1.0)
+        v, s = neuron_step(jnp.array([0.9]), jnp.array([0.6]), cfg)
+        np.testing.assert_allclose(np.asarray(v), [0.5], atol=1e-6)
+
+    def test_lif_leak(self):
+        cfg = NeuronConfig(model="lif", reset="hard", threshold=10.0, leak=0.5)
+        v, _ = neuron_step(jnp.array([1.0]), jnp.array([0.0]), cfg)
+        np.testing.assert_allclose(np.asarray(v), [0.5])
+
+    def test_surrogate_grad_triangle(self):
+        g = jax.grad(lambda v: spike_surrogate(v, 1.0, 1.0))(jnp.float32(1.0))
+        assert float(g) == pytest.approx(1.0)  # peak of triangle
+        g0 = jax.grad(lambda v: spike_surrogate(v, 1.0, 1.0))(jnp.float32(3.0))
+        assert float(g0) == 0.0  # outside support
+
+    @pytest.mark.parametrize("reset", ["hard", "soft"])
+    @pytest.mark.parametrize("model", ["if", "lif"])
+    def test_int_neuron_in_range(self, model, reset):
+        spec = QuantSpec(4)
+        cfg = NeuronConfig(model=model, reset=reset, leak_shift=2)
+        rng = np.random.default_rng(0)
+        v = jnp.array(rng.integers(spec.v_min, spec.v_max + 1, (64,)), jnp.int32)
+        p = jnp.array(rng.integers(-30, 30, (64,)), jnp.int32)
+        v2, s = neuron_step_int(v, p, cfg, spec, threshold_int=20)
+        assert int(v2.min()) >= spec.v_min and int(v2.max()) <= spec.v_max
+        assert set(np.unique(np.asarray(s))).issubset({0, 1})
+
+    @given(st.integers(min_value=-50, max_value=50))
+    @settings(max_examples=30, deadline=None)
+    def test_int_hard_reset_zeroes_fired(self, vmem):
+        spec = QuantSpec(4)
+        cfg = NeuronConfig(model="if", reset="hard")
+        v2, s = neuron_step_int(
+            jnp.array([vmem], jnp.int32), jnp.array([30], jnp.int32), cfg, spec, 20
+        )
+        if int(s[0]) == 1:
+            assert int(v2[0]) == 0

@@ -1,0 +1,142 @@
+"""Per-kernel validation: shape/dtype/sparsity sweeps vs the jnp oracles.
+
+Kernels execute in interpret mode (CPU container); on TPU the same code
+compiles to Mosaic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.lif_step import lif_step_fused, lif_step_fused_int
+from repro.kernels.quant_matmul import pack_int4, quant_matmul, unpack_int4
+from repro.kernels.spike_gemm import spike_gemm
+
+
+class TestSpikeGemm:
+    @pytest.mark.parametrize("m,k,n", [
+        (32, 64, 16), (128, 128, 128), (100, 300, 50), (257, 511, 129),
+        (16, 1024, 12),  # macro-like: fan-in chunk x 12 neurons
+    ])
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+    def test_matches_oracle(self, m, k, n, density):
+        rng = np.random.default_rng(m + k + n)
+        s = (rng.random((m, k)) < density).astype(np.int8)
+        w = rng.integers(-8, 8, (k, n)).astype(np.int8)
+        out = spike_gemm(jnp.array(s), jnp.array(w), interpret=True)
+        want = ref.spike_gemm_ref(jnp.array(s), jnp.array(w))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [jnp.int8, jnp.uint8, jnp.bool_, jnp.int32])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        s = jnp.array((rng.random((64, 64)) < 0.1)).astype(dtype)
+        w = jnp.array(rng.integers(-8, 8, (64, 24)).astype(np.int8))
+        out = spike_gemm(s, w, interpret=True)
+        want = ref.spike_gemm_ref(s.astype(jnp.int8), w)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_skip_and_dense_agree(self):
+        """Zero-skipping must not change results (C3: exactness)."""
+        rng = np.random.default_rng(3)
+        s = (rng.random((256, 256)) < 0.02).astype(np.int8)
+        w = rng.integers(-8, 8, (256, 128)).astype(np.int8)
+        a = spike_gemm(jnp.array(s), jnp.array(w), interpret=True, skip_empty=True)
+        b = spike_gemm(jnp.array(s), jnp.array(w), interpret=True, skip_empty=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_block_shapes(self):
+        rng = np.random.default_rng(4)
+        s = (rng.random((96, 192)) < 0.1).astype(np.int8)
+        w = rng.integers(-8, 8, (192, 64)).astype(np.int8)
+        want = np.asarray(ref.spike_gemm_ref(jnp.array(s), jnp.array(w)))
+        for block in [(32, 32, 32), (64, 64, 64), (128, 128, 128)]:
+            out = spike_gemm(jnp.array(s), jnp.array(w), block=block, interpret=True)
+            np.testing.assert_array_equal(np.asarray(out), want)
+
+
+class TestLifKernel:
+    @pytest.mark.parametrize("leak,soft", [(1.0, False), (0.9, True), (0.8, False)])
+    @pytest.mark.parametrize("shape", [(7,), (33, 65), (3, 17, 29)])
+    def test_float_matches_oracle(self, leak, soft, shape):
+        rng = np.random.default_rng(0)
+        v = jnp.array(rng.normal(size=shape).astype(np.float32))
+        i = jnp.array(rng.normal(size=shape).astype(np.float32))
+        vo, so = lif_step_fused(v, i, threshold=0.5, leak=leak, soft_reset=soft,
+                                interpret=True)
+        ve, se = ref.lif_step_ref(v, i, 0.5, leak, soft)
+        np.testing.assert_allclose(np.asarray(vo), np.asarray(ve), rtol=1e-4, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(so), np.asarray(se))
+
+    @pytest.mark.parametrize("shift,soft,bits", [(0, False, 7), (3, True, 7),
+                                                 (2, False, 11), (1, True, 15)])
+    def test_int_matches_oracle(self, shift, soft, bits):
+        rng = np.random.default_rng(1)
+        hi = (1 << (bits - 1)) - 1
+        v = jnp.array(rng.integers(-hi, hi, (50, 33)).astype(np.int32))
+        p = jnp.array(rng.integers(-hi // 2, hi // 2, (50, 33)).astype(np.int32))
+        vo, so = lif_step_fused_int(v, p, threshold=hi // 3, leak_shift=shift,
+                                    soft_reset=soft, vmem_bits=bits, interpret=True)
+        ve, se = ref.lif_step_int_ref(v, p, hi // 3, shift, soft, bits)
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(ve))
+        np.testing.assert_array_equal(np.asarray(so), np.asarray(se))
+
+    def test_int_kernel_matches_neuron_module(self):
+        """Kernel == core.neuron integer datapath (bit-exactness chain)."""
+        from repro.core.neuron import NeuronConfig, neuron_step_int
+        from repro.core.quant import QuantSpec
+
+        spec = QuantSpec(4)
+        cfg = NeuronConfig(model="lif", reset="soft", leak_shift=3)
+        rng = np.random.default_rng(2)
+        v = jnp.array(rng.integers(-60, 60, (40,)).astype(np.int32))
+        p = jnp.array(rng.integers(-20, 20, (40,)).astype(np.int32))
+        v_mod, s_mod = neuron_step_int(v, p, cfg, spec, 15)
+        v_k, s_k = lif_step_fused_int(v, p, 15, leak_shift=3, soft_reset=True,
+                                      vmem_bits=7, interpret=True)
+        np.testing.assert_array_equal(np.asarray(v_mod), np.asarray(v_k))
+        np.testing.assert_array_equal(np.asarray(s_mod), np.asarray(s_k))
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(16, 64, 32), (64, 200, 96), (130, 514, 258)])
+    def test_int8(self, m, k, n):
+        rng = np.random.default_rng(m)
+        x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.array(rng.integers(-127, 128, (k, n)).astype(np.int8))
+        sc = jnp.array((rng.random(n) * 0.01 + 1e-4).astype(np.float32))
+        out = quant_matmul(x, w, sc, bits=8, interpret=True)
+        want = ref.quant_matmul_ref(x, w, sc, bits=8)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_int4_pack_roundtrip(self):
+        rng = np.random.default_rng(0)
+        w = rng.integers(-8, 8, (64, 32)).astype(np.int8)
+        packed = pack_int4(jnp.array(w))
+        assert packed.shape == (32, 32)
+        np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), w)
+
+    @pytest.mark.parametrize("m,k,n", [(16, 64, 32), (32, 256, 128)])
+    def test_int4(self, m, k, n):
+        rng = np.random.default_rng(n)
+        x = jnp.array(rng.normal(size=(m, k)).astype(np.float32))
+        w4 = rng.integers(-8, 8, (k, n)).astype(np.int8)
+        packed = pack_int4(jnp.array(w4))
+        sc = jnp.array((rng.random(n) * 0.01 + 1e-4).astype(np.float32))
+        out = quant_matmul(x, packed, sc, bits=4, interpret=True)
+        want = ref.quant_matmul_ref(x, packed, sc, bits=4)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_quant_dequant_accuracy_envelope(self):
+        """w4 matmul error vs full precision stays within quant noise."""
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(8, 128)).astype(np.float32)
+        w = rng.normal(size=(128, 64)).astype(np.float32) * 0.1
+        from repro.core.quant import QuantSpec, quantize
+
+        q, sc = quantize(jnp.array(w), QuantSpec(4), axis=0)
+        out = quant_matmul(jnp.array(x), q, sc.reshape(-1), bits=8, interpret=True)
+        rel = np.abs(np.asarray(out) - x @ w).max() / np.abs(x @ w).max()
+        assert rel < 0.15

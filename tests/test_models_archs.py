@@ -1,0 +1,155 @@
+"""Per-arch smoke tests (assignment requirement): every assigned arch at a
+REDUCED same-family config — one forward/train step on CPU, output shapes +
+no NaNs; plus chunked-vs-recurrent equivalence for the stateful families
+and dense prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs
+from repro.models.model import (
+    init_opt_state,
+    init_params,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    forward,
+)
+from repro.models.transformer import init_decode_state
+
+ARCHS = list_archs()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.embed_inputs:
+        return {
+            "tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+        }
+    return {
+        "embeds": jax.random.normal(KEY, (b, s, cfg.d_model), jnp.bfloat16),
+        "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = get_config(arch).reduced()
+        params = init_params(KEY, cfg)
+        ts = make_train_step(cfg)
+        p2, o2, m = ts(params, init_opt_state(params), 0, _batch(cfg))
+        assert np.isfinite(float(m["loss"])), arch
+        # params actually updated
+        leaf0 = jax.tree.leaves(params)[0]
+        leaf1 = jax.tree.leaves(p2)[0]
+        assert not np.allclose(np.asarray(leaf0), np.asarray(leaf1))
+
+    def test_prefill_and_decode(self, arch):
+        cfg = get_config(arch).reduced()
+        params = init_params(KEY, cfg)
+        b, s = 2, 32
+        batch = {k: v for k, v in _batch(cfg, b, s).items() if k != "labels"}
+        logits, cache = make_prefill_step(cfg)(params, batch)
+        assert logits.shape == (b, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+        ds = make_decode_step(cfg)
+        dc = init_decode_state(cfg, b, s)
+        db = ({"tokens": jnp.zeros((b, 1), jnp.int32)} if cfg.embed_inputs
+              else {"embeds": jnp.zeros((b, 1, cfg.d_model), jnp.bfloat16)})
+        dl, dc2 = ds(params, dc, db)
+        assert dl.shape == (b, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(dl, np.float32)).all(), arch
+        assert int(dc2["len"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-7b"])
+def test_chunked_vs_recurrent_equivalence(arch):
+    """Train-time chunked scan == token-by-token recurrence (independent
+    implementations of the same math)."""
+    cfg = get_config(arch).reduced()
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, cfg.vocab_size)
+    logits_full, _, _ = forward(params, cfg, tokens=tokens)
+    ds = make_decode_step(cfg)
+    cache = init_decode_state(cfg, b, s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = ds(params, cache, {"tokens": tokens[:, t : t + 1]})
+        outs.append(lg)
+    logits_dec = jnp.stack(outs, axis=1)
+    a = np.asarray(logits_full, np.float32)
+    bb = np.asarray(logits_dec, np.float32)
+    rel = np.max(np.abs(a - bb)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 0.05, (arch, rel)
+
+
+def test_dense_prefill_decode_consistency():
+    """Decoding one token after prefill == forward over seq+1 (dense attn)."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, s + 1), 0, cfg.vocab_size)
+    # full forward over s+1 tokens
+    logits_full, _, _ = forward(params, cfg, tokens=toks)
+    last_full = np.asarray(logits_full[:, -1, :], np.float32)
+    # prefill s tokens, then decode token s
+    _, cache = make_prefill_step(cfg)(params, {"tokens": toks[:, :s]})
+    cache = dict(cache)
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    # pad cache seq dim to s+1 capacity
+    cache["k"] = jnp.pad(cache["k"], ((0, 0), (0, 0), (0, 0), (0, 1), (0, 0)))
+    cache["v"] = jnp.pad(cache["v"], ((0, 0), (0, 0), (0, 0), (0, 1), (0, 0)))
+    dl, _ = make_decode_step(cfg)(params, cache, {"tokens": toks[:, s : s + 1]})
+    rel = np.max(np.abs(np.asarray(dl, np.float32) - last_full)) / (
+        np.max(np.abs(last_full)) + 1e-9
+    )
+    assert rel < 0.05, rel
+
+
+def test_param_counts_sane():
+    """Analytic param counts in the right ballpark for named sizes."""
+    expected = {
+        "qwen1.5-0.5b": (0.3e9, 0.8e9),
+        "starcoder2-3b": (2.5e9, 3.5e9),
+        "qwen3-14b": (12e9, 16e9),
+        "stablelm-3b": (2e9, 3.5e9),
+        "rwkv6-7b": (6e9, 9e9),
+        # assignment specifies 48L x 64e x d_ff 1408 (the HF Moonlight-16B
+        # has 27L; the explicit assigned numbers give ~28B and we follow them)
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "chameleon-34b": (30e9, 37e9),
+        "zamba2-7b": (5e9, 9e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+
+
+def test_long_context_skip_rules():
+    long = SHAPES["long_500k"]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if arch in ("rwkv6-7b", "zamba2-7b"):
+            assert cfg.supports(long), arch
+        else:
+            assert not cfg.supports(long), arch
+            assert cfg.skip_reason(long)
+
+
+def test_input_specs_are_abstract():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            for v in specs.values():
+                assert isinstance(v, jax.ShapeDtypeStruct)

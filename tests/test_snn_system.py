@@ -1,0 +1,123 @@
+"""System tests: the paper's SNNs — bit-exact int path, QAT training,
+Pallas-kernel-backed layer equivalence, synthetic data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.layers import im2col, quantize_layer_weights, spiking_conv, SpikingConvParams
+from repro.core.network import gesture_net, init_params, optical_flow_net, run_snn
+from repro.core.neuron import NeuronConfig
+from repro.core.quant import QuantSpec
+from repro.snn.data import make_flow_batch, make_gesture_batch
+from repro.snn.train import TrainConfig, init_train_state, train_step
+
+
+class TestIm2col:
+    def test_matches_conv(self):
+        """im2col + matmul == lax.conv (the input-loader contract, C5)."""
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.random((2, 8, 8, 3)).astype(np.float32))
+        w = jnp.array(rng.random((3 * 3 * 3, 5)).astype(np.float32))
+        cols = im2col(x, 3, 3, stride=1, padding=1)
+        got = (cols @ w).reshape(2, 8, 8, 5)
+        w_hwio = w.reshape(3, 3, 3, 5)
+        want = jax.lax.conv_general_dilated(
+            x, w_hwio, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    @pytest.mark.parametrize("stride,pad", [(1, 0), (2, 1), (2, 0)])
+    def test_stride_padding(self, stride, pad):
+        x = jnp.ones((1, 9, 9, 2))
+        cols = im2col(x, 3, 3, stride, pad)
+        h_out = (9 + 2 * pad - 3) // stride + 1
+        assert cols.shape == (1, h_out * h_out, 18)
+
+
+class TestNetworks:
+    def test_table2_shapes(self):
+        g = gesture_net()
+        assert g.input_hw == (64, 64) and g.timesteps == 20
+        conv_layers = [l for l in g.layers if l.kind == "conv"]
+        assert len(conv_layers) == 5  # Conv(2,16) + 4x Conv(16,16)
+        assert g.layers[-1].c_in == 64 and g.layers[-1].c_out == 11
+
+        f = optical_flow_net()
+        assert f.input_hw == (288, 384) and f.timesteps == 10
+        convs = [l for l in f.layers if l.kind == "conv"]
+        assert [c.c_out for c in convs] == [32] * 7 + [2]
+
+    def test_forward_shapes_and_finite(self):
+        spec = gesture_net()
+        params = init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(1), (3, 2, 64, 64, 2)) < 0.05
+             ).astype(jnp.float32)
+        out, _ = run_snn(params, x, spec, QuantSpec(4))
+        assert out.shape == (2, 11)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_flow_net_readout(self):
+        spec = optical_flow_net()
+        params = init_params(jax.random.PRNGKey(0), spec)
+        x = (jax.random.uniform(jax.random.PRNGKey(1), (2, 1, 288, 384, 2)) < 0.02
+             ).astype(jnp.float32)
+        out, _ = run_snn(params, x, spec, QuantSpec(4))
+        assert out.shape == (1, 288, 384, 2)
+
+    def test_int_mode_bit_exact_under_requant(self):
+        """Integer path: quantized weights + int Vmem stay in range."""
+        spec = QuantSpec(4)
+        p = SpikingConvParams(3, 3, 1, 1, NeuronConfig(model="if", threshold=0.5))
+        w = jax.random.normal(jax.random.PRNGKey(0), (18, 8)) * 0.3
+        wq, scale = quantize_layer_weights(w, spec)
+        spikes = (jax.random.uniform(jax.random.PRNGKey(1), (2, 8, 8, 2)) < 0.1
+                  ).astype(jnp.float32)
+        vmem = jnp.zeros((2, 8, 8, 8), jnp.int32)
+        v2, s = spiking_conv(spikes, wq, vmem, p, spec, mode="int", w_scale=scale)
+        assert int(v2.min()) >= spec.v_min and int(v2.max()) <= spec.v_max
+        assert set(np.unique(np.asarray(s))).issubset({0.0, 1.0})
+
+
+class TestTraining:
+    def test_gesture_loss_decreases(self):
+        spec = gesture_net()
+        cfg = TrainConfig(weight_bits=4, lr=2e-3)
+        state = init_train_state(jax.random.PRNGKey(0), spec, cfg)
+        key = jax.random.PRNGKey(1)
+        losses = []
+        # fixed batch: loss must drop when overfitting a single batch
+        ev, lbl = make_gesture_batch(key, batch=4, timesteps=5, hw=(64, 64))
+        for _ in range(12):
+            state, m = train_step(state, (ev, lbl), spec, cfg)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], losses
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_all_precisions_trainable(self, bits):
+        spec = gesture_net()
+        cfg = TrainConfig(weight_bits=bits, lr=1e-3)
+        state = init_train_state(jax.random.PRNGKey(0), spec, cfg)
+        ev, lbl = make_gesture_batch(jax.random.PRNGKey(2), batch=2, timesteps=3,
+                                     hw=(64, 64))
+        state, m = train_step(state, (ev, lbl), spec, cfg)
+        assert np.isfinite(float(m["loss"]))
+
+
+class TestSyntheticData:
+    def test_gesture_determinism(self):
+        a, la = make_gesture_batch(jax.random.PRNGKey(7), batch=2, timesteps=3, hw=(32, 32))
+        b, lb = make_gesture_batch(jax.random.PRNGKey(7), batch=2, timesteps=3, hw=(32, 32))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_gesture_sparsity_band(self):
+        ev, _ = make_gesture_batch(jax.random.PRNGKey(0), batch=4, timesteps=5, hw=(64, 64))
+        sparsity = float(jnp.mean(ev == 0))
+        assert 0.9 < sparsity <= 1.0  # event-camera-like
+
+    def test_flow_groundtruth_shape(self):
+        ev, flow = make_flow_batch(jax.random.PRNGKey(0), batch=2, timesteps=4, hw=(32, 48))
+        assert ev.shape == (4, 2, 32, 48, 2)
+        assert flow.shape == (2, 32, 48, 2)
+        assert float(jnp.max(jnp.abs(flow))) <= 2.0
