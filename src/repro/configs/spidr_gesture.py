@@ -1,4 +1,16 @@
 """The paper's gesture-recognition SNN (Table II)."""
-from ..core.network import gesture_net
+import dataclasses
+
+from ..core.network import SNNSpec, gesture_net
 
 CONFIG = gesture_net()
+
+
+def reduced(hw: tuple = (32, 32), timesteps: int = 6) -> SNNSpec:
+    """CPU-sized variant for serving demos / CI: same topology, smaller
+    frames and fewer timesteps (the FC fan-in is fixed by the adaptive
+    pool, so any multiple-of-8 ``hw`` works)."""
+    # Two stride-2 pools then an adaptive pool to 2x2: hw/4 must be an even
+    # number >= 2, i.e. hw divisible by 8.
+    assert hw[0] % 8 == 0 and hw[1] % 8 == 0, f"hw must be multiples of 8: {hw}"
+    return dataclasses.replace(CONFIG, input_hw=hw, timesteps=timesteps)

@@ -1,0 +1,27 @@
+"""Batched multi-timestep SNN inference engine (the fused-timestep spine).
+
+``inference`` builds an integer (bit-exact) engine from a trained/initialized
+network and runs whole ``(T, B, H, W, C)`` event streams through it with a
+``lax.scan`` over time; ``cost`` threads the run's spike statistics through
+the calibrated pipeline/energy models.
+"""
+from .cost import EngineCost, estimate_cost
+from .inference import (
+    EngineConfig,
+    EngineOutput,
+    SNNEngine,
+    build_engine,
+    run_engine,
+    run_reference,
+)
+
+__all__ = [
+    "EngineConfig",
+    "EngineOutput",
+    "SNNEngine",
+    "build_engine",
+    "run_engine",
+    "run_reference",
+    "EngineCost",
+    "estimate_cost",
+]

@@ -9,7 +9,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spike_gemm_ref", "lif_step_ref", "lif_step_int_ref", "quant_matmul_ref"]
+__all__ = [
+    "spike_gemm_ref",
+    "lif_step_ref",
+    "lif_step_int_ref",
+    "fused_lif_gemm_ref",
+    "fused_lif_gemm_int_ref",
+    "quant_matmul_ref",
+]
 
 
 def spike_gemm_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
@@ -39,6 +46,26 @@ def lif_step_int_ref(v, partial, threshold, leak_shift=0, soft_reset=False, vmem
     s = (v >= threshold).astype(jnp.int32)
     v_next = jnp.clip(v - s * threshold, v_min, v_max) if soft_reset else v * (1 - s)
     return v_next, s
+
+
+def fused_lif_gemm_ref(spikes, weights, v, threshold=1.0, leak=1.0,
+                       soft_reset=False):
+    """Float fused kernel oracle: spike-GEMM then the neuron update."""
+    acc = jnp.dot(
+        spikes.astype(jnp.float32),
+        weights.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return lif_step_ref(v.astype(jnp.float32), acc, threshold, leak, soft_reset)
+
+
+def fused_lif_gemm_int_ref(spikes, weights, v, threshold, leak_shift=0,
+                           soft_reset=False, vmem_bits=7):
+    """Integer fused kernel oracle: wide GEMM, one saturation, neuron step."""
+    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
+    partial = jnp.clip(spike_gemm_ref(spikes, weights), v_min, v_max)
+    return lif_step_int_ref(v, partial, threshold, leak_shift, soft_reset,
+                            vmem_bits)
 
 
 def quant_matmul_ref(x, w_q, scale, bits=8):

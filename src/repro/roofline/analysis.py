@@ -147,12 +147,20 @@ def parse_hlo(text: str) -> dict:
             if opkind == "dot":
                 out_dims = _shape_dims(rtype) or []
                 out_n = float(np.prod(out_dims)) if out_dims else 1.0
-                # contraction size from lhs operand shape
-                lhs_m = re.match(r"%?([\w\.\-]+)", rest)
+                # contraction size from lhs operand shape.  Depending on the
+                # XLA version the operand is printed inline-typed
+                # ("dot(f32[64,512]{1,0} %param, ...)") or bare ("dot(%param,
+                # ...)"); read the inline type first, else the symbol table.
                 cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                lhs_dims = None
+                if _SHAPE_RE.match(rest):
+                    lhs_dims = _shape_dims(rest.split(" ")[0])
+                else:
+                    lhs_m = re.match(r"%?([\w\.\-]+)", rest)
+                    if lhs_m and lhs_m.group(1) in symtab:
+                        lhs_dims = _shape_dims(symtab[lhs_m.group(1)])
                 csize = 1.0
-                if lhs_m and cdims_m and lhs_m.group(1) in symtab:
-                    lhs_dims = _shape_dims(symtab[lhs_m.group(1)]) or []
+                if cdims_m and lhs_dims:
                     for ci in cdims_m.group(1).split(","):
                         if ci and int(ci) < len(lhs_dims):
                             csize *= lhs_dims[int(ci)]

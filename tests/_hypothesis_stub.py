@@ -1,0 +1,36 @@
+"""Fallback shims when ``hypothesis`` (the ``dev`` extra) is not installed.
+
+Property-based tests are skipped with a pointer to ``pip install -e .[dev]``;
+every plain pytest test in the same module still collects and runs.  With
+hypothesis installed these shims are never imported.
+"""
+import pytest
+
+_SKIP = pytest.mark.skip(
+    reason="hypothesis not installed (pip install -e .[dev])"
+)
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        return _SKIP(fn)
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """Inert stand-in for any ``strategies.*`` call."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _Strategy()

@@ -2,7 +2,10 @@
 pipeline DES (C7)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import energy, s2a, zero_skip
 from repro.core.energy import HW, TABLE1_PAPER, gops, power_mw, tops_per_watt

@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import cim_macro, modes
 from repro.core.cim_macro import (

@@ -178,8 +178,9 @@ class TestCheckpointer:
         ck = Checkpointer(str(tmp_path))
         tree = {"w": jnp.arange(16.0).reshape(4, 4)}
         ck.save(0, tree)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh = make_mesh_compat((1,), ("data",))
         sh = {"w": jax.sharding.NamedSharding(mesh, P("data", None))}
         out = ck.restore(0, tree, shardings=sh)
         np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))

@@ -32,8 +32,8 @@ class TestRooflineParser:
             from jax.sharding import PartitionSpec as P
             from repro.roofline.analysis import parse_hlo
 
-            mesh = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            from repro.launch.mesh import make_mesh_compat
+            mesh = make_mesh_compat((4, 2), ("data", "model"))
 
             def scanned(x, w):
                 return jnp.sum(jax.lax.scan(lambda c, wi: (jnp.dot(c, wi), None), x, w)[0])

@@ -1,0 +1,273 @@
+"""Fused multi-timestep engine: kernel bit-exactness, engine-vs-reference
+equivalence over sparse streams, and batch-vmap consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import spidr_gesture
+from repro.core.cim_macro import accumulate_sequential
+from repro.core.layers import SpikingConvParams, SpikingDenseParams
+from repro.core.network import SNNLayer, SNNSpec, gesture_net, init_params
+from repro.core.neuron import NeuronConfig
+from repro.core.quant import QuantSpec
+from repro.engine import (
+    EngineConfig,
+    build_engine,
+    estimate_cost,
+    run_engine,
+    run_reference,
+)
+from repro.kernels import ref
+from repro.kernels.fused_lif_gemm import fused_lif_gemm, fused_lif_gemm_int
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("m,k,n", [(32, 64, 16), (100, 300, 50), (257, 140, 33)])
+    @pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+    def test_int_matches_oracle(self, m, k, n, density):
+        rng = np.random.default_rng(m + n)
+        s = (rng.random((m, k)) < density).astype(np.int8)
+        w = rng.integers(-7, 8, (k, n)).astype(np.int8)
+        v = rng.integers(-40, 40, (m, n)).astype(np.int32)
+        vo, so = fused_lif_gemm_int(
+            jnp.array(s), jnp.array(w), jnp.array(v), threshold=15,
+            leak_shift=3, soft_reset=True, vmem_bits=7, interpret=True,
+        )
+        ve, se = ref.fused_lif_gemm_int_ref(
+            jnp.array(s), jnp.array(w), jnp.array(v), 15, 3, True, 7)
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(ve))
+        np.testing.assert_array_equal(np.asarray(so), np.asarray(se))
+
+    @pytest.mark.parametrize("leak,soft", [(1.0, False), (0.9, True)])
+    def test_float_matches_oracle(self, leak, soft):
+        rng = np.random.default_rng(1)
+        s = (rng.random((65, 130)) < 0.1).astype(np.float32)
+        w = rng.normal(size=(130, 40)).astype(np.float32)
+        v = rng.normal(size=(65, 40)).astype(np.float32)
+        vo, so = fused_lif_gemm(
+            jnp.array(s), jnp.array(w), jnp.array(v), threshold=0.5,
+            leak=leak, soft_reset=soft, interpret=True,
+        )
+        ve, se = ref.fused_lif_gemm_ref(
+            jnp.array(s), jnp.array(w), jnp.array(v), 0.5, leak, soft)
+        np.testing.assert_allclose(np.asarray(vo), np.asarray(ve),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(so), np.asarray(se))
+
+    def test_skip_and_dense_agree(self):
+        """Tile zero-skipping must not change results (C3 exactness)."""
+        rng = np.random.default_rng(2)
+        s = (rng.random((256, 256)) < 0.02).astype(np.int8)
+        w = rng.integers(-7, 8, (256, 64)).astype(np.int8)
+        v = rng.integers(-30, 30, (256, 64)).astype(np.int32)
+        a = fused_lif_gemm_int(jnp.array(s), jnp.array(w), jnp.array(v),
+                               threshold=10, interpret=True, skip_empty=True)
+        b = fused_lif_gemm_int(jnp.array(s), jnp.array(w), jnp.array(v),
+                               threshold=10, interpret=True, skip_empty=False)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_matches_accumulate_sequential_no_overflow(self, bits):
+        """Fused accumulation == silicon-order saturating chain when no
+        intermediate sum leaves the Vmem range (QuantSpec semantics)."""
+        spec = QuantSpec(bits)
+        rng = np.random.default_rng(bits)
+        rows, pairs, n = 128, 16, 12
+        spikes = (rng.random((rows, pairs)) < 0.05).astype(np.int8)
+        # |w| <= 2 and <= ~13 spikes/column keeps every partial sum in range.
+        w = rng.integers(-2, 3, (rows, n)).astype(np.int8)
+        vmem = rng.integers(-8, 8, (pairs, n)).astype(np.int32)
+        want = accumulate_sequential(spikes, w, vmem, spec)
+        # Kernel view: Vmem[x, n] = clip(v + clip(S^T @ W)); IF, no firing.
+        vo, so = fused_lif_gemm_int(
+            jnp.array(spikes.T), jnp.array(w), jnp.array(vmem),
+            threshold=spec.v_max, leak_shift=0, soft_reset=False,
+            vmem_bits=spec.vmem_bits, interpret=True,
+        )
+        assert int(jnp.sum(so)) == 0  # stayed below threshold by construction
+        np.testing.assert_array_equal(np.asarray(vo), want)
+
+
+def _mini_spec(readout="rate", hw=(16, 16), timesteps=3):
+    n = NeuronConfig(model="lif", reset="soft", threshold=0.5, leak_shift=3)
+    return SNNSpec(
+        name="mini", input_hw=hw, in_channels=2, timesteps=timesteps,
+        layers=(
+            SNNLayer("conv", 2, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("pool"),
+            SNNLayer("conv", 8, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("adaptive_pool", target_hw=2),
+            SNNLayer("fc", 32, 5, fc=SpikingDenseParams(n)),
+        ),
+        readout=readout,
+    )
+
+
+def _engine(spec, seed=0, **over):
+    params = init_params(jax.random.PRNGKey(seed), spec)
+    cfg = EngineConfig(QuantSpec(over.pop("bits", 4)), interpret=True,
+                       block=(64, 64, 64), **over)
+    return build_engine(spec, params, cfg)
+
+
+class TestEngine:
+    @pytest.mark.parametrize("sparsity", [0.60, 0.90, 0.95])
+    def test_engine_matches_reference_sparse_streams(self, sparsity):
+        """Fused scan engine == pure-jnp per-timestep loop, spike for spike."""
+        spec = _mini_spec()
+        eng = _engine(spec)
+        rng = np.random.default_rng(int(sparsity * 100))
+        ev = jnp.asarray(
+            (rng.random((spec.timesteps, 2) + spec.input_hw + (2,)) > sparsity)
+            .astype(np.float32))
+        out = run_engine(eng, ev)
+        want = run_reference(eng, ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))
+        np.testing.assert_array_equal(np.asarray(out.spike_counts),
+                                      np.asarray(want.spike_counts))
+        np.testing.assert_array_equal(np.asarray(out.input_counts),
+                                      np.asarray(want.input_counts))
+
+    def test_two_layer_gesture_config(self):
+        """Acceptance: identical spike counts on a 2-layer gesture network."""
+        from repro.snn.data import make_gesture_batch
+
+        full = gesture_net()
+        spec = SNNSpec(
+            name="gesture2", input_hw=(32, 32), in_channels=2, timesteps=4,
+            layers=full.layers[:2], readout="vmem",
+        )
+        eng = _engine(spec)
+        ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=2,
+                                   timesteps=spec.timesteps, hw=spec.input_hw)
+        out = run_engine(eng, ev)
+        want = run_reference(eng, ev)
+        np.testing.assert_array_equal(np.asarray(out.spike_counts),
+                                      np.asarray(want.spike_counts))
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))
+
+    def test_skip_vs_dense_engine(self):
+        spec = _mini_spec()
+        eng = _engine(spec)
+        dense = dataclasses.replace(
+            eng, cfg=dataclasses.replace(eng.cfg, skip_empty=False))
+        rng = np.random.default_rng(7)
+        ev = jnp.asarray((rng.random((3, 2, 16, 16, 2)) > 0.9)
+                         .astype(np.float32))
+        a, b = run_engine(eng, ev), run_engine(dense, ev)
+        np.testing.assert_array_equal(np.asarray(a.readout),
+                                      np.asarray(b.readout))
+
+    @pytest.mark.parametrize("backend", ["fused", "jnp"])
+    def test_batch_fold_vs_vmap(self, backend):
+        """Folding B into GEMM rows == vmapping per-sample runs."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend=backend)
+        rng = np.random.default_rng(9)
+        ev = jnp.asarray((rng.random((3, 3, 16, 16, 2)) > 0.85)
+                         .astype(np.float32))
+        fold = run_engine(eng, ev, batch_mode="fold")
+        vm = run_engine(eng, ev, batch_mode="vmap")
+        np.testing.assert_array_equal(np.asarray(fold.readout),
+                                      np.asarray(vm.readout))
+        np.testing.assert_array_equal(np.asarray(fold.spike_counts),
+                                      np.asarray(vm.spike_counts))
+
+    def test_lif_zero_leak_shift_backends_agree(self):
+        """leak_shift=0 means no leak in BOTH backends (regression)."""
+        n = NeuronConfig(model="lif", reset="soft", threshold=0.5, leak_shift=0)
+        spec = SNNSpec(
+            name="noleak", input_hw=(16, 16), in_channels=2, timesteps=3,
+            layers=(SNNLayer("conv", 2, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),),
+            readout="vmem",
+        )
+        fused = _engine(spec)
+        rng = np.random.default_rng(11)
+        ev = jnp.asarray((rng.random((3, 2, 16, 16, 2)) > 0.9)
+                         .astype(np.float32))
+        out = run_engine(fused, ev)
+        want = run_reference(fused, ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))
+        # Vmem must be able to carry across steps (not zeroed by v >> 0).
+        assert int(jnp.sum(jnp.abs(out.readout))) > 0
+
+    def test_vmem_readout_with_pooling(self):
+        """Vmem carry shape follows the pooled plane, not input_hw."""
+        n = NeuronConfig(model="if", reset="soft", threshold=0.5)
+        spec = SNNSpec(
+            name="pooled_vmem", input_hw=(16, 16), in_channels=2, timesteps=2,
+            layers=(
+                SNNLayer("conv", 2, 4, conv=SpikingConvParams(3, 3, 1, 1, n)),
+                SNNLayer("pool"),
+                SNNLayer("conv", 4, 4, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            ),
+            readout="vmem",
+        )
+        eng = _engine(spec)
+        rng = np.random.default_rng(12)
+        ev = jnp.asarray((rng.random((2, 2, 16, 16, 2)) > 0.9)
+                         .astype(np.float32))
+        out = run_engine(eng, ev)
+        assert out.readout.shape == (2, 8, 8, 4)
+        want = run_reference(eng, ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))
+
+    def test_reduced_hw_guard(self):
+        with pytest.raises(AssertionError):
+            spidr_gesture.reduced(hw=(12, 12))
+
+    def test_vmem_readout(self):
+        spec = _mini_spec()
+        flow = SNNSpec(name="mini_vmem", input_hw=(16, 16), in_channels=2,
+                       timesteps=3, layers=spec.layers[:1], readout="vmem")
+        eng = _engine(flow)
+        rng = np.random.default_rng(3)
+        ev = jnp.asarray((rng.random((3, 2, 16, 16, 2)) > 0.9)
+                         .astype(np.float32))
+        out = run_engine(eng, ev)
+        want = run_reference(eng, ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))
+        assert out.readout.shape == (2, 16, 16, 8)
+
+    def test_cost_model_threads_pipeline_and_energy(self):
+        spec = _mini_spec()
+        eng = _engine(spec)
+        rng = np.random.default_rng(4)
+        ev = jnp.asarray((rng.random((3, 2, 16, 16, 2)) > 0.9)
+                         .astype(np.float32))
+        out = run_engine(eng, ev)
+        cost = estimate_cost(spec, QuantSpec(4),
+                             np.asarray(out.input_counts) / 2)
+        assert cost.makespan_cycles > 0
+        assert cost.sync_makespan_cycles >= cost.makespan_cycles
+        assert cost.energy_uj > 0
+        assert 0.0 <= cost.mean_sparsity <= 1.0
+        # Denser input must never be cheaper in cycles.
+        ev2 = jnp.asarray((rng.random((3, 2, 16, 16, 2)) > 0.5)
+                          .astype(np.float32))
+        out2 = run_engine(eng, ev2)
+        cost2 = estimate_cost(spec, QuantSpec(4),
+                              np.asarray(out2.input_counts) / 2)
+        assert cost2.makespan_cycles >= cost.makespan_cycles
+
+    def test_reduced_gesture_config_runs(self):
+        """The serving config (configs.spidr_gesture.reduced) end to end."""
+        spec = spidr_gesture.reduced(hw=(16, 16), timesteps=2)
+        eng = _engine(spec)
+        rng = np.random.default_rng(5)
+        ev = jnp.asarray((rng.random((2, 1, 16, 16, 2)) > 0.95)
+                         .astype(np.float32))
+        out = run_engine(eng, ev)
+        assert out.readout.shape == (1, 11)
+        want = run_reference(eng, ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(want.readout))

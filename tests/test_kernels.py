@@ -7,7 +7,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.lif_step import lif_step_fused, lif_step_fused_int
