@@ -16,9 +16,17 @@ the reproduced quantity vs the paper's reported value.
   engine_zero_skip       (TPU adaptation): fused multi-timestep engine —
                          zero-skip vs dense ablation at several sparsity
                          levels, exactness vs the pure-jnp reference
+  streaming_occupancy    (serving): chunked stateful streaming vs
+                         whole-stream batch at several occupancy levels —
+                         throughput, latency, and exactness of the
+                         persistent-Vmem session path
+
+``python benchmarks/run.py`` runs everything; ``--streaming`` runs only the
+streaming-vs-whole-stream ablation.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -305,6 +313,70 @@ def engine_zero_skip():
              f"skip_vs_dense_wall={us_dense/max(us,1):.2f}x")
 
 
+def streaming_occupancy():
+    """Serving ablation: chunked streaming vs whole-stream batch inference.
+
+    Serves the reduced gesture network at several occupancy levels (how many
+    of the session's slots hold live streams).  For each level: wall time and
+    per-stream latency through the persistent-Vmem streaming path
+    (``StreamSessionManager`` via ``StreamingSNNServer``, chunk_T timesteps
+    per tick) vs one whole-stream ``run_engine`` call over the same streams,
+    plus bit-exactness of the streamed readouts against the whole-stream
+    result.  Uses the jnp backend so the numbers measure the serving loop,
+    not the Pallas interpreter.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import spidr_gesture
+    from repro.core.network import init_params
+    from repro.core.quant import QuantSpec
+    from repro.engine import EngineConfig, build_engine, run_engine
+    from repro.launch.serve import SNNRequest, StreamingSNNServer
+    from repro.snn.data import make_gesture_batch
+
+    spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    eng = build_engine(spec, params, EngineConfig(QuantSpec(4), backend="jnp"))
+    capacity, chunk_T = 4, 3
+
+    ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=capacity,
+                               timesteps=spec.timesteps, hw=spec.input_hw)
+    ev_np = np.asarray(ev)
+
+    for occ in (1, 2, 4):
+        whole = run_engine(eng, jnp.asarray(ev_np[:, :occ]))
+        # One server per occupancy level: after a drain every slot is free
+        # again, so repeated drains measure the steady-state serving loop
+        # (the jitted session step compiles once, on the warm-up drain).
+        server = StreamingSNNServer(eng, capacity=capacity, chunk_T=chunk_T)
+
+        def drain():
+            for r in range(occ):
+                server.submit(SNNRequest(rid=r, events=ev_np[:, r]))
+            while server.step():
+                pass
+
+        us_stream = _timeit(drain, n=2)
+        whole_fn = jax.jit(lambda e: run_engine(eng, e))  # same jit treatment
+        ev_occ = jnp.asarray(ev_np[:, :occ])
+        us_whole = _timeit(
+            lambda: jax.block_until_ready(whole_fn(ev_occ)), n=2)
+        done = {r.rid: r for r in server.done[-occ:]}
+        exact = all(
+            (np.asarray(done[r].readout) == np.asarray(whole.readout)[r]).all()
+            for r in range(occ)
+        )
+        lat = [r.done_at - r.submitted_at for r in server.done[-occ:]]
+        _row(
+            f"streaming_occ{occ}of{capacity}", us_stream,
+            f"exact={exact} streams_per_s={occ / (us_stream / 1e6):.1f} "
+            f"p50_latency_ms={np.median(lat) * 1e3:.1f} "
+            f"whole_stream_us={us_whole:.0f} "
+            f"stream_vs_whole={us_stream / max(us_whole, 1):.2f}x",
+        )
+
+
 ALL = [
     table1_chip_summary,
     fig4_aer_overhead,
@@ -316,12 +388,17 @@ ALL = [
     fig17_sparsity_sweep,
     spike_gemm_kernel,
     engine_zero_skip,
+    streaming_occupancy,
 ]
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streaming", action="store_true",
+                    help="run only the streaming-vs-whole-stream ablation")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in [streaming_occupancy] if args.streaming else ALL:
         fn()
 
 

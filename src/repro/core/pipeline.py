@@ -19,6 +19,14 @@ independent 3-CM chains (Mode 1).  Per timestep t and macro i:
 
 Outputs: per-timestep latency, makespan, utilization per unit, and the
 synchronous-worst-case makespan for comparison (the paper's motivation).
+
+Streaming: the handshake's only cross-timestep coupling is when each unit
+becomes free (``cm_free``/``recv_ready``/``nu_free``).  ``simulate_pipeline``
+optionally takes and returns that :class:`PipelineState`, so a stream
+processed chunk by chunk — resuming each call from the previous chunk's
+final state — yields *exactly* the whole-stream makespan, independent of
+how the timesteps are chunked (the streaming session manager relies on
+this for chunking-invariant cumulative cycle accounting).
 """
 from __future__ import annotations
 
@@ -28,7 +36,8 @@ import numpy as np
 
 from .cim_macro import NEURON_MACRO_CYCLES
 
-__all__ = ["PipelineConfig", "PipelineResult", "simulate_pipeline"]
+__all__ = ["PipelineConfig", "PipelineResult", "PipelineState",
+           "simulate_pipeline"]
 
 # Per-timestep fixed costs (cycles), derived in DESIGN.md from Table I:
 # reset of partial Vmems + partial-Vmem transfer between units.
@@ -46,12 +55,35 @@ class PipelineConfig:
 
 
 @dataclasses.dataclass
+class PipelineState:
+    """Resumable handshake state (absolute cycles since the stream began).
+
+    Carries everything a chunk-by-chunk simulation needs for *all* of
+    :class:`PipelineResult`'s quantities — makespan, busy counters and the
+    synchronous-worst-case alternative — to be cumulative since the stream
+    began and bit-identical to one whole-stream call, for any chunking.
+    """
+
+    cm_free: np.ndarray      # (n_cm,) when each compute macro is next free
+    recv_ready: np.ndarray   # (n_cm,) when upstream partials arrive
+    nu_free: int             # when the neuron macro is next free
+    cm_busy: np.ndarray      # (n_cm,) cumulative busy cycles per macro
+    nu_busy: int             # cumulative neuron-macro busy cycles
+    total_T: int             # timesteps simulated since the stream began
+    worst_compute: int       # max per-timestep CM cycles seen so far
+
+
+@dataclasses.dataclass
 class PipelineResult:
     makespan: int                  # total cycles for all timesteps
     sync_makespan: int             # rigid worst-case-synchronous pipeline
     cm_busy: np.ndarray            # (n_cm,) busy cycles per compute macro
     nu_busy: int
     per_timestep_finish: np.ndarray
+    state: PipelineState | None = None   # final state (resume point)
+    # When resumed from a prior state, every field above (and the derived
+    # speedup/utilization properties) is cumulative since the stream began,
+    # except per_timestep_finish which covers only this call's timesteps.
 
     @property
     def speedup_vs_sync(self) -> float:
@@ -65,18 +97,34 @@ class PipelineResult:
 def simulate_pipeline(
     compute_cycles: np.ndarray,  # (timesteps, n_cm) data-dependent CM cycles
     cfg: PipelineConfig | None = None,
+    state: PipelineState | None = None,
 ) -> PipelineResult:
-    """Simulate Fig 13's handshake for ``timesteps`` over a CM chain + NU."""
+    """Simulate Fig 13's handshake for ``timesteps`` over a CM chain + NU.
+
+    Pass the previous call's ``result.state`` as ``state`` to resume the
+    clocks mid-stream: simulating a stream chunk by chunk this way produces
+    bit-identical makespans to one whole-stream call, for any chunking.
+    """
     cfg = cfg or PipelineConfig()
     T, n_cm = compute_cycles.shape
     assert n_cm == cfg.n_cm, (n_cm, cfg.n_cm)
 
     # finish[i] = time CM i finished its current timestep's compute+send.
-    cm_free = np.zeros(n_cm, dtype=np.int64)    # when the unit is next free
-    recv_ready = np.zeros(n_cm, dtype=np.int64)  # when upstream partials arrive
-    nu_free = 0
-    cm_busy = np.zeros(n_cm, dtype=np.int64)
-    nu_busy = 0
+    if state is None:
+        cm_free = np.zeros(n_cm, dtype=np.int64)   # when the unit is next free
+        recv_ready = np.zeros(n_cm, dtype=np.int64)  # upstream-arrival clocks
+        nu_free = 0
+        cm_busy = np.zeros(n_cm, dtype=np.int64)
+        nu_busy = 0
+        prior_T, prior_worst = 0, 0
+    else:
+        assert state.cm_free.shape == (n_cm,), state.cm_free.shape
+        cm_free = state.cm_free.astype(np.int64).copy()
+        recv_ready = state.recv_ready.astype(np.int64).copy()
+        nu_free = int(state.nu_free)
+        cm_busy = state.cm_busy.astype(np.int64).copy()
+        nu_busy = int(state.nu_busy)
+        prior_T, prior_worst = int(state.total_T), int(state.worst_compute)
     finish_t = np.zeros(T, dtype=np.int64)
 
     for t in range(T):
@@ -102,10 +150,12 @@ def simulate_pipeline(
         finish_t[t] = nu_end
 
     # Rigid synchronous alternative: every stage takes the worst case of the
-    # whole run; stages advance in lockstep (the design the paper avoids).
-    worst = int(compute_cycles.max()) + cfg.reset_cycles + PIPE_FILL
-    stage = worst + cfg.transfer_cycles
-    sync_makespan = (n_cm + T - 1) * stage + cfg.neuron_cycles * T
+    # whole run (so far, when resumed); stages advance in lockstep (the
+    # design the paper avoids).
+    worst_compute = max(int(compute_cycles.max()), prior_worst)
+    total_T = prior_T + T
+    stage = worst_compute + cfg.reset_cycles + PIPE_FILL + cfg.transfer_cycles
+    sync_makespan = (n_cm + total_T - 1) * stage + cfg.neuron_cycles * total_T
 
     return PipelineResult(
         makespan=int(finish_t[-1]),
@@ -113,4 +163,8 @@ def simulate_pipeline(
         cm_busy=cm_busy,
         nu_busy=int(nu_busy),
         per_timestep_finish=finish_t,
+        state=PipelineState(cm_free=cm_free, recv_ready=recv_ready,
+                            nu_free=int(nu_free), cm_busy=cm_busy.copy(),
+                            nu_busy=int(nu_busy), total_T=total_T,
+                            worst_compute=worst_compute),
     )

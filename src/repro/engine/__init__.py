@@ -1,27 +1,43 @@
 """Batched multi-timestep SNN inference engine (the fused-timestep spine).
 
 ``inference`` builds an integer (bit-exact) engine from a trained/initialized
-network and runs whole ``(T, B, H, W, C)`` event streams through it with a
-``lax.scan`` over time; ``cost`` threads the run's spike statistics through
-the calibrated pipeline/energy models.
+network and runs event streams through it — either whole ``(T, B, H, W, C)``
+tensors (``run_engine``) or chunk by chunk with persistent neuron state
+(``init_state`` / ``run_chunk``, bit-identical under any chunking);
+``streaming`` multiplexes many live streams onto one fixed-shape batched
+chunk step with per-slot cost accounting; ``cost`` threads a run's spike
+statistics through the calibrated pipeline/energy models.
 """
 from .cost import EngineCost, estimate_cost
 from .inference import (
+    ChunkOutput,
     EngineConfig,
     EngineOutput,
+    EngineState,
     SNNEngine,
     build_engine,
+    init_state,
+    reset_slot,
+    run_chunk,
     run_engine,
     run_reference,
 )
+from .streaming import SlotUpdate, StreamSessionManager
 
 __all__ = [
+    "ChunkOutput",
     "EngineConfig",
     "EngineOutput",
+    "EngineState",
     "SNNEngine",
     "build_engine",
+    "init_state",
+    "reset_slot",
+    "run_chunk",
     "run_engine",
     "run_reference",
     "EngineCost",
     "estimate_cost",
+    "SlotUpdate",
+    "StreamSessionManager",
 ]

@@ -24,7 +24,7 @@ import numpy as np
 from ..core.energy import HW, chunk_energy_total_nj, gops, power_mw
 from ..core.modes import CoreConfig, map_layer
 from ..core.network import SNNSpec
-from ..core.pipeline import PipelineConfig, simulate_pipeline
+from ..core.pipeline import PipelineConfig, PipelineState, simulate_pipeline
 from ..core.quant import QuantSpec
 
 __all__ = ["EngineCost", "estimate_cost"]
@@ -40,6 +40,7 @@ class EngineCost:
     avg_power_mw: float
     mean_sparsity: float        # measured input sparsity across layers/steps
     gops_equivalent: float      # dense-equivalent throughput at that sparsity
+    pipeline_state: PipelineState | None = None  # resume point for streaming
 
 
 def estimate_cost(
@@ -48,8 +49,17 @@ def estimate_cost(
     input_counts: np.ndarray,   # (T, n_weight_layers) input spikes per layer
     hw: HW = HW(),
     n_cm: int = 9,
+    pipeline_state: PipelineState | None = None,
 ) -> EngineCost:
-    """Chip cost of one engine run from its recorded spike statistics."""
+    """Chip cost of one engine run from its recorded spike statistics.
+
+    For a stream priced chunk by chunk, pass the previous chunk's
+    ``cost.pipeline_state`` as ``pipeline_state``: the async-handshake
+    clocks resume, so ``makespan_cycles`` is the *cumulative* makespan
+    since the stream began and is bit-identical to pricing the whole
+    stream in one call, for any chunking.  (Energy is additive across
+    chunks either way.)
+    """
     counts = np.asarray(input_counts, dtype=np.float64)
     T, n_layers = counts.shape
     shapes = spec.layer_shapes()
@@ -65,7 +75,8 @@ def estimate_cost(
         per_macro = 2.0 * counts[:, li] * m.channel_tiles / active
         compute_cycles[:, :active] += np.ceil(per_macro)[:, None].astype(np.int64)
 
-    res = simulate_pipeline(compute_cycles, PipelineConfig(n_cm=n_cm))
+    res = simulate_pipeline(compute_cycles, PipelineConfig(n_cm=n_cm),
+                            state=pipeline_state)
 
     # Sparsity across all layer inputs (position-weighted).
     positions = np.array(
@@ -86,4 +97,5 @@ def estimate_cost(
         avg_power_mw=power_mw(hw),
         mean_sparsity=sparsity,
         gops_equivalent=gops(sparsity, qspec.weight_bits, hw.freq_hz),
+        pipeline_state=res.state,
     )

@@ -18,6 +18,17 @@ Execution modes:
   * backend="jnp"   — pure-jnp composition of ``saturate`` +
     ``neuron_step_int``; the bit-exact oracle the fused path must match.
 
+Chunked API (streaming): the engine's neuron state is first-class.
+``init_state(engine, batch)`` returns an :class:`EngineState` (per-layer
+integer Vmem carries, the readout accumulator, cumulative per-sample spike
+statistics) and ``run_chunk(engine, state, events_chunk)`` advances it by
+any number of timesteps, returning the new state plus a
+:class:`ChunkOutput`.  Chunking is *exact*: for any partition of a stream
+into chunks (including one timestep at a time) the final state and readout
+are bit-identical to a single whole-stream call — the chip analogue is Vmem
+staying resident in the CIM macro while events handshake in asynchronously.
+``run_engine`` itself is just ``init_state`` + one ``run_chunk``.
+
 Batch handling: the batch dimension is *folded into the GEMM rows*
 (B output positions x P patches share one weight-stationary pass —
 the TPU analogue of the macro's Vmem-pair weight reuse), or vmapped
@@ -28,6 +39,12 @@ tests assert it.  Sharding the folded batch over a mesh data axis is a
 Everything is integer once weights are quantized: per-layer ``QuantSpec``
 precision (W_b-bit weights, (2W-1)-bit Vmem), integer thresholds derived
 from the float threshold and the layer's quantization scale.
+
+Memory: all readout/count accumulators are threaded through the scan
+*carry* (O(1) in T), never recomputed from stacked per-timestep outputs —
+a requirement for long-running streams (see the T=512 smoke test).  The
+optional per-timestep count stacks in :class:`ChunkOutput` are O(chunk_T),
+and can be disabled entirely with ``collect_counts=False``.
 """
 from __future__ import annotations
 
@@ -44,10 +61,15 @@ from ..core.quant import QuantSpec, quantize, saturate
 from ..kernels.fused_lif_gemm import DEFAULT_BLOCK, fused_lif_gemm_int
 
 __all__ = [
+    "ChunkOutput",
     "EngineConfig",
     "EngineOutput",
+    "EngineState",
     "SNNEngine",
     "build_engine",
+    "init_state",
+    "reset_slot",
+    "run_chunk",
     "run_engine",
     "run_reference",
 ]
@@ -95,6 +117,55 @@ class EngineOutput:
     readout: jax.Array       # (B, classes) int32 rate counts or (B,H,W,C) Vmem
     spike_counts: jax.Array  # (T, n_weight_layers) output spikes per layer
     input_counts: jax.Array  # (T, n_weight_layers) input spikes per layer
+
+
+@dataclasses.dataclass
+class EngineState:
+    """Persistent neuron state between chunks of one event stream batch.
+
+    The streaming analogue of the chip keeping Vmem resident in the CIM
+    macro across timesteps: everything a stream needs to resume exactly
+    where it left off, and nothing that grows with the stream length.
+
+    ``vmem``        per-layer int32 Vmem carries (None for pool layers),
+                    batch-leading shapes ``(B, H, W, C)`` / ``(B, N)``.
+    ``readout_acc`` cumulative readout: summed output spikes ("rate") or
+                    the last weight layer's Vmem ("vmem").
+    ``out_counts``  ``(n_weight_layers, B)`` cumulative output spikes.
+    ``in_counts``   ``(n_weight_layers, B)`` cumulative input spikes.
+
+    All accumulators are int32, like the rest of the integer datapath: a
+    persistent "rate" stream wraps once any output unit or counter passes
+    2^31 cumulative spikes.  At DVS-like rates that is hours of continuous
+    streaming on one session — rotate (close/reopen) streams well before
+    then; Vmem itself saturates at (2W−1) bits and never wraps.
+    """
+
+    vmem: tuple
+    readout_acc: jax.Array
+    out_counts: jax.Array
+    in_counts: jax.Array
+
+
+@dataclasses.dataclass
+class ChunkOutput:
+    """What one ``run_chunk`` call reports (alongside the new state).
+
+    ``readout`` is the *cumulative* readout after the chunk (identical to
+    ``state.readout_acc``).  The count fields are per-timestep stacks for
+    this chunk only — ``(chunk_T, L)`` batch-summed and ``(chunk_T, L, B)``
+    per-sample — or None under ``collect_counts=False``.  ``readouts`` is
+    the per-timestep cumulative readout ``(chunk_T, B, ...)``, populated
+    only under ``collect_readouts=True`` (the session manager uses it to
+    read out a stream that ends mid-chunk).
+    """
+
+    readout: jax.Array
+    spike_counts: Optional[jax.Array] = None
+    input_counts: Optional[jax.Array] = None
+    slot_spike_counts: Optional[jax.Array] = None
+    slot_input_counts: Optional[jax.Array] = None
+    readouts: Optional[jax.Array] = None
 
 
 def build_engine(spec: SNNSpec, params, cfg: EngineConfig) -> SNNEngine:
@@ -164,14 +235,20 @@ def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
 
 
 def _forward_t(engine: SNNEngine, state, x_t):
-    """One timestep through every layer. Returns (state', out, in/out counts)."""
+    """One timestep through every layer.
+
+    Returns ``(state', out, counts_out, counts_in)`` with *per-sample*
+    counts of shape ``(n_weight_layers, B)`` — the batch axis is kept so a
+    streaming session can attribute spikes (and therefore chip cost) to the
+    individual stream occupying each batch slot.
+    """
     cfg = engine.cfg
     act = x_t  # float {0,1} spike plane (im2col needs float)
     new_state, counts_out, counts_in, out = [], [], [], None
     for el, v in zip(engine.layers, state):
         if el.kind == "conv":
             b = act.shape[0]
-            counts_in.append(jnp.sum(act != 0))
+            counts_in.append(jnp.sum(act != 0, axis=(1, 2, 3)))
             cols = im2col(act, el.kh, el.kw, el.stride, el.padding)  # (B,P,F)
             rows, f = b * cols.shape[1], cols.shape[2]
             k = el.w_q.shape[1]
@@ -182,14 +259,14 @@ def _forward_t(engine: SNNEngine, state, x_t):
             v_next = v_next.reshape(v.shape)
             s = s.reshape(v.shape)
             new_state.append(v_next)
-            counts_out.append(jnp.sum(s))
+            counts_out.append(jnp.sum(s, axis=(1, 2, 3)))
             act, out = s.astype(jnp.float32), (v_next, s)
         elif el.kind == "fc":
             flat = act.reshape(act.shape[0], -1)
-            counts_in.append(jnp.sum(flat != 0))
+            counts_in.append(jnp.sum(flat != 0, axis=1))
             v_next, s = _fused_update(el, flat.astype(jnp.int8), v, cfg)
             new_state.append(v_next)
-            counts_out.append(jnp.sum(s))
+            counts_out.append(jnp.sum(s, axis=1))
             act, out = s.astype(jnp.float32), (v_next, s)
         elif el.kind == "pool":
             act = maxpool2d(act)
@@ -202,7 +279,7 @@ def _forward_t(engine: SNNEngine, state, x_t):
     return new_state, out, jnp.stack(counts_out), jnp.stack(counts_in)
 
 
-def _init_state(engine: SNNEngine, batch: int):
+def _init_vmem(engine: SNNEngine, batch: int):
     """Integer Vmem carries (network's float shape walk, cast to int32)."""
     from ..core.network import _init_state as _float_state
 
@@ -212,27 +289,104 @@ def _init_state(engine: SNNEngine, batch: int):
     ]
 
 
-def _run_folded(engine: SNNEngine, events: jax.Array) -> EngineOutput:
+def _n_weight_layers(engine: SNNEngine) -> int:
+    return sum(1 for el in engine.layers if el.kind in ("conv", "fc"))
+
+
+def init_state(engine: SNNEngine, batch: int) -> EngineState:
+    """Fresh (all-zero) persistent state for ``batch`` concurrent streams."""
     spec = engine.spec
-    batch = events.shape[1]
-    state0 = _init_state(engine, batch)
-    n_out = spec.layers[-1].c_out
+    vmem = _init_vmem(engine, batch)
+    if spec.readout == "rate":
+        acc0 = jnp.zeros((batch, spec.layers[-1].c_out), jnp.int32)
+    else:
+        # Vmem readout: the accumulator is the last weight layer's Vmem,
+        # whose spatial shape reflects any pooling/striding along the way.
+        acc0 = jnp.zeros_like(
+            next(s for s in reversed(vmem) if s is not None))
+    n_l = _n_weight_layers(engine)
+    return EngineState(
+        vmem=tuple(vmem),
+        readout_acc=acc0,
+        out_counts=jnp.zeros((n_l, batch), jnp.int32),
+        in_counts=jnp.zeros((n_l, batch), jnp.int32),
+    )
+
+
+def reset_slot(state: EngineState, slot) -> EngineState:
+    """Zero one batch slot's state, leaving every other slot untouched.
+
+    This is slot retirement for continuous batching: the retired stream's
+    Vmem, readout and counters are cleared so the next stream admitted into
+    the slot starts from ``init_state`` conditions, and so the slot's
+    all-zero spike planes feed the zero-skip path until then.  ``slot`` may
+    be a traced int32 — the update is a pure scatter, safe under ``jit``.
+    """
+    return EngineState(
+        vmem=tuple(None if v is None else v.at[slot].set(0)
+                   for v in state.vmem),
+        readout_acc=state.readout_acc.at[slot].set(0),
+        out_counts=state.out_counts.at[:, slot].set(0),
+        in_counts=state.in_counts.at[:, slot].set(0),
+    )
+
+
+def run_chunk(
+    engine: SNNEngine,
+    state: EngineState,
+    events: jax.Array,           # (chunk_T, B, H, W, C) binary
+    collect_counts: bool = True,
+    collect_readouts: bool = False,
+) -> tuple:
+    """Advance ``state`` by one chunk of timesteps; returns ``(state', out)``.
+
+    Bit-exact under any chunking: ``run_chunk`` over consecutive chunks of
+    a stream produces the same final state/readout as one call over the
+    concatenated stream.  All accumulators live in the scan *carry* — O(1)
+    memory in the total stream length; the optional per-timestep stacks in
+    the returned :class:`ChunkOutput` are O(chunk_T) and can be switched
+    off for long whole-stream runs (``collect_counts=False``).
+    """
+    assert events.ndim == 5, "expected (chunk_T, B, H, W, C)"
+    spec = engine.spec
 
     def step(carry, x_t):
-        state, acc = carry
-        state, (v, s), c_out, c_in = _forward_t(engine, state, x_t)
+        vmem, acc, oc, ic = carry
+        vmem, (v, s), c_out, c_in = _forward_t(engine, list(vmem), x_t)
         acc = acc + s if spec.readout == "rate" else v
-        return (state, acc), (c_out, c_in)
+        carry = (tuple(vmem), acc, oc + c_out, ic + c_in)
+        ys = (
+            (c_out, c_in) if collect_counts else None,
+            acc if collect_readouts else None,
+        )
+        return carry, ys
 
-    if spec.readout == "rate":
-        acc0 = jnp.zeros((batch, n_out), jnp.int32)
-    else:
-        # Vmem readout: the carry is the last weight layer's Vmem, whose
-        # spatial shape reflects any pooling/striding along the way.
-        acc0 = jnp.zeros_like(
-            next(s for s in reversed(state0) if s is not None))
-    (_, acc), (c_out, c_in) = jax.lax.scan(step, (state0, acc0), events)
-    return EngineOutput(readout=acc, spike_counts=c_out, input_counts=c_in)
+    carry0 = (state.vmem, state.readout_acc, state.out_counts,
+              state.in_counts)
+    (vmem, acc, oc, ic), (counts, accs) = jax.lax.scan(step, carry0, events)
+    new_state = EngineState(vmem=vmem, readout_acc=acc,
+                            out_counts=oc, in_counts=ic)
+    slot_out = slot_in = None
+    sum_out = sum_in = None
+    if collect_counts:
+        slot_out, slot_in = counts            # (chunk_T, L, B)
+        sum_out = jnp.sum(slot_out, axis=2)   # (chunk_T, L)
+        sum_in = jnp.sum(slot_in, axis=2)
+    return new_state, ChunkOutput(
+        readout=acc,
+        spike_counts=sum_out,
+        input_counts=sum_in,
+        slot_spike_counts=slot_out,
+        slot_input_counts=slot_in,
+        readouts=accs,
+    )
+
+
+def _run_folded(engine: SNNEngine, events: jax.Array) -> EngineOutput:
+    state = init_state(engine, events.shape[1])
+    _, out = run_chunk(engine, state, events)
+    return EngineOutput(readout=out.readout, spike_counts=out.spike_counts,
+                        input_counts=out.input_counts)
 
 
 def run_engine(engine: SNNEngine, events: jax.Array,
@@ -242,6 +396,9 @@ def run_engine(engine: SNNEngine, events: jax.Array,
     ``batch_mode="fold"`` folds B into the GEMM row dimension (one big
     weight-stationary pass per layer-timestep); ``"vmap"`` maps a
     single-sample engine over the batch axis.  Identical results.
+
+    Implemented as ``init_state`` + one whole-stream ``run_chunk`` — the
+    chunked/streaming path and the batch path are the same code.
     """
     assert events.ndim == 5, "expected (T, B, H, W, C)"
     if batch_mode == "fold":
@@ -265,6 +422,19 @@ jax.tree_util.register_pytree_node(
     lambda _, leaves: EngineOutput(*leaves),
 )
 
+jax.tree_util.register_pytree_node(
+    EngineState,
+    lambda st: ((st.vmem, st.readout_acc, st.out_counts, st.in_counts), None),
+    lambda _, leaves: EngineState(*leaves),
+)
+
+jax.tree_util.register_pytree_node(
+    ChunkOutput,
+    lambda o: ((o.readout, o.spike_counts, o.input_counts,
+                o.slot_spike_counts, o.slot_input_counts, o.readouts), None),
+    lambda _, leaves: ChunkOutput(*leaves),
+)
+
 
 # ---------------------------------------------------------------------------
 # Pure-jnp per-timestep reference (no scan, no Pallas): the ground truth the
@@ -276,7 +446,7 @@ def run_reference(engine: SNNEngine, events) -> EngineOutput:
     cfg = dataclasses.replace(engine.cfg, backend="jnp")
     ref_engine = dataclasses.replace(engine, cfg=cfg)
     batch = events.shape[1]
-    state = _init_state(ref_engine, batch)
+    state = _init_vmem(ref_engine, batch)
     acc = None
     all_out, all_in = [], []
     for t in range(events.shape[0]):
@@ -285,8 +455,8 @@ def run_reference(engine: SNNEngine, events) -> EngineOutput:
             acc = s if acc is None else acc + s
         else:
             acc = v
-        all_out.append(c_out)
-        all_in.append(c_in)
+        all_out.append(jnp.sum(c_out, axis=1))
+        all_in.append(jnp.sum(c_in, axis=1))
     return EngineOutput(
         readout=acc,
         spike_counts=jnp.stack(all_out),

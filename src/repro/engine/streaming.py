@@ -1,0 +1,201 @@
+"""Streaming stateful serving: persistent-Vmem sessions over one batched step.
+
+SpiDR's defining behavior is that a layer's membrane potentials never leave
+the CIM macro between timesteps — events handshake in asynchronously and
+accumulate into *resident* state.  This module is the serving-system
+analogue: a :class:`StreamSessionManager` keeps an :class:`EngineState`
+whose batch axis is a bank of ``capacity`` *slots*, each slot holding the
+persistent Vmem of one live event stream, and multiplexes every live
+stream's next chunk of timesteps into **one fixed-shape batched
+``run_chunk``** per tick (shapes never change, so the jitted step never
+recompiles — the SNN analogue of the continuous-batching decode loop in
+``launch/serve.py``).
+
+Slot lifecycle (continuous batching over neuron state instead of KV cache):
+
+  open()   -> allocate a free slot, zero its state (``reset_slot``)
+  step()   -> pack each live stream's chunk into (chunk_T, capacity, H, W, C)
+              — slots without a stream (or whose stream ended) contribute
+              all-zero event planes, which the kernels' tile-level zero-skip
+              eliminates — then advance every slot in one ``run_chunk``
+  close()  -> retire the slot: zero its state so it is inert until reuse
+
+Per-slot accounting rides on the engine's per-sample spike counters: each
+tick, every *active* slot's ``(chunk_T, n_layers)`` input-spike counts are
+priced with ``engine/cost.py`` (async-pipeline cycles + calibrated energy)
+and accumulated on the slot.  Inactive slots are never charged — their
+event planes are all zero, they contribute no spikes, and their cumulative
+cycle/energy stays exactly 0.
+
+Exactness contract (tested): because batch slots never interact inside the
+engine (GEMM rows are independent, pooling is per-sample), a stream served
+through the manager — whatever the chunk size, whatever else shares the
+batch, however often slots around it are retired and reused — produces
+spikes and readouts bit-identical to a single whole-stream ``run_engine``
+call on that stream alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost import estimate_cost
+from .inference import SNNEngine, init_state, reset_slot, run_chunk
+
+__all__ = ["SlotUpdate", "StreamSessionManager"]
+
+
+@dataclasses.dataclass
+class SlotUpdate:
+    """Incremental reply for one stream after one session tick."""
+
+    slot: int
+    timesteps: int               # cumulative timesteps consumed by the stream
+    readout: np.ndarray          # cumulative readout at ``timesteps``
+    chunk_spikes: int            # output spikes this chunk (all layers)
+    cycles: int                  # cumulative async-pipeline makespan cycles
+    energy_uj: float             # cumulative calibrated energy
+
+
+class StreamSessionManager:
+    """Multiplex up to ``capacity`` live event streams onto one engine.
+
+    ``step(chunks)`` takes ``{slot: events}`` with ``events`` of shape
+    ``(t, H, W, C)``, ``t <= chunk_T`` (a shorter *final* chunk is
+    zero-padded and the readout is snapshotted at the true last timestep),
+    and returns ``{slot: SlotUpdate}``.
+
+    The bit-exactness contract is *enforced*, not advisory: every open slot
+    must deliver a chunk on every tick (a slot idling through a tick would
+    silently advance its resident Vmem through zero-input timesteps — leak
+    decay the whole-stream run never saw), and a slot that delivered a
+    short chunk has ended its stream and must be ``close()``d before the
+    next tick.  Violations raise immediately instead of corrupting state.
+    """
+
+    def __init__(self, engine: SNNEngine, capacity: int = 4,
+                 chunk_T: int = 2):
+        assert capacity >= 1 and chunk_T >= 1
+        self.engine = engine
+        self.capacity = capacity
+        self.chunk_T = chunk_T
+        spec = engine.spec
+        self._frame_shape = tuple(spec.input_hw) + (spec.in_channels,)
+        self.state = init_state(engine, capacity)
+        self.active = [False] * capacity
+        self.ended = [False] * capacity   # delivered a short (final) chunk
+        # Per-slot cumulative accounting (host side, O(capacity)).
+        self.slot_timesteps = np.zeros(capacity, np.int64)
+        self.slot_spikes = np.zeros(capacity, np.int64)
+        self.slot_cycles = np.zeros(capacity, np.int64)
+        self.slot_energy_uj = np.zeros(capacity, np.float64)
+        # Resumable async-handshake clocks per slot: pricing chunk by chunk
+        # with carried state gives the same cumulative makespan as pricing
+        # the whole stream at once (chunking-invariant cycle accounting).
+        self._pipe_state = [None] * capacity
+        self.ticks = 0
+        # One jitted step for the session's lifetime: fixed (chunk_T,
+        # capacity, H, W, C) event shape, fixed state shapes.
+        self._step = jax.jit(
+            lambda st, ev: run_chunk(engine, st, ev, collect_counts=True,
+                                     collect_readouts=True)
+        )
+        self._reset = jax.jit(reset_slot)
+
+    # -- lifecycle ---------------------------------------------------------
+    def open(self) -> Optional[int]:
+        """Allocate a slot for a new stream; None if the session is full.
+
+        The slot's device state needs no reset here: ``init_state`` zeroed
+        every slot at construction and ``close()`` re-zeroes on retirement,
+        so an inactive slot is already all-zero — admission is free.
+        """
+        for i in range(self.capacity):
+            if not self.active[i]:
+                self.active[i] = True
+                self.ended[i] = False
+                self.slot_timesteps[i] = 0
+                self.slot_spikes[i] = 0
+                self.slot_cycles[i] = 0
+                self.slot_energy_uj[i] = 0.0
+                self._pipe_state[i] = None
+                return i
+        return None
+
+    def close(self, slot: int) -> None:
+        """Retire a stream: zero the slot so it is inert until reused."""
+        assert self.active[slot], f"slot {slot} is not active"
+        self.active[slot] = False
+        self.ended[slot] = False
+        self.state = self._reset(self.state, jnp.int32(slot))
+
+    @property
+    def occupancy(self) -> int:
+        return sum(self.active)
+
+    # -- the batched tick --------------------------------------------------
+    def step(self, chunks: Dict[int, np.ndarray]) -> Dict[int, SlotUpdate]:
+        """Advance every slot by ``chunk_T`` timesteps in one fused call."""
+        missing = [i for i in range(self.capacity)
+                   if self.active[i] and i not in chunks]
+        assert not missing, (
+            f"open slots {missing} delivered no chunk this tick; an idle "
+            "open slot would advance its Vmem through zero-input timesteps "
+            "and diverge from the whole-stream result — deliver every tick "
+            "or close() the slot")
+        ev = np.zeros((self.chunk_T, self.capacity) + self._frame_shape,
+                      np.float32)
+        valid = {}
+        for slot, chunk in chunks.items():
+            assert self.active[slot], f"slot {slot} is not active"
+            assert not self.ended[slot], (
+                f"slot {slot} already delivered a short (final) chunk; "
+                "close() it before the next tick")
+            chunk = np.asarray(chunk)
+            assert chunk.shape[1:] == self._frame_shape, chunk.shape
+            t = chunk.shape[0]
+            assert 1 <= t <= self.chunk_T, (t, self.chunk_T)
+            if t < self.chunk_T:
+                self.ended[slot] = True
+            ev[:t, slot] = chunk
+            valid[slot] = t
+
+        self.state, out = self._step(self.state, jnp.asarray(ev))
+        self.ticks += 1
+
+        readouts = np.asarray(out.readouts)          # (chunk_T, capacity, ...)
+        slot_out = np.asarray(out.slot_spike_counts)  # (chunk_T, L, capacity)
+        slot_in = np.asarray(out.slot_input_counts)
+
+        updates = {}
+        for slot, t in valid.items():
+            # Price only this stream's own spikes: its per-slot input counts
+            # over the chunk's valid timesteps, through the async-pipeline +
+            # calibrated-energy models.  Idle slots are never charged.
+            counts = slot_in[:t, :, slot]
+            cost = estimate_cost(self.engine.spec, self.engine.cfg.qspec,
+                                 counts,
+                                 pipeline_state=self._pipe_state[slot])
+            self._pipe_state[slot] = cost.pipeline_state
+            chunk_spikes = int(slot_out[:t, :, slot].sum())
+            self.slot_timesteps[slot] += t
+            self.slot_spikes[slot] += chunk_spikes
+            # Resumed clocks make the makespan cumulative since the stream
+            # began — identical to a whole-stream estimate, any chunking.
+            self.slot_cycles[slot] = int(cost.makespan_cycles)
+            self.slot_energy_uj[slot] += float(cost.energy_uj)
+            updates[slot] = SlotUpdate(
+                slot=slot,
+                timesteps=int(self.slot_timesteps[slot]),
+                # Snapshot at the stream's true last timestep: zero-padded
+                # tail steps never leak into a short final chunk's readout.
+                readout=readouts[t - 1, slot],
+                chunk_spikes=chunk_spikes,
+                cycles=int(self.slot_cycles[slot]),
+                energy_uj=float(self.slot_energy_uj[slot]),
+            )
+        return updates

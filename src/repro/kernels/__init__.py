@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels transferring SpiDR's hardware insights to the MXU.
+
+Every kernel runs on CPU under ``interpret=True`` (required off-TPU: the
+revisited-accumulator k grid is only sequential on TPU hardware) and
+compiles to Mosaic on TPU unchanged; ``ref.py`` holds the pure-jnp oracles
+each kernel is tested bit-exact (int) or allclose (float) against.
+
+  spike_gemm      zero-skip binary-activation GEMM (compute macro, C1+C3)
+  lif_step        neuron-macro leak/threshold/reset as one VPU pass (C8)
+  fused_lif_gemm  both phases fused: Vmem stays VMEM-resident between
+                  accumulation and fire — the chip's defining property
+  quant_matmul    weight-quantized GEMM for the LM serving path (non-SNN)
+  wkv_chunk       chunked WKV scan (non-SNN, RWKV serving path)
+
+``docs/kernels.md`` documents contracts, block-size constraints and the
+interpret-mode rules.
+"""

@@ -4,12 +4,21 @@ Runs a real serving loop on host devices (reduced configs on CPU):
   python -m repro.launch.serve --arch qwen1.5-0.5b --reduced --requests 16
   python -m repro.launch.serve --snn gesture --requests 8
   python -m repro.launch.serve --snn optical-flow --requests 4 --jnp
+  python -m repro.launch.serve --snn gesture --streaming --chunk-T 2
 
 The SNN path serves whole DVS event streams through the fused multi-timestep
 engine (``repro.engine``): requests are batched up to a fixed capacity
 (shapes never change -> no recompilation), each batch runs one fused
 scan-over-time inference, and the reply carries the rate/Vmem readout plus
 the chip-cost estimate (cycles/energy) from the calibrated models.
+
+With ``--streaming`` the SNN path switches to *stateful* serving: each
+request's events are delivered in chunks of ``--chunk-T`` timesteps, live
+streams keep persistent per-slot Vmem between chunks
+(``engine.StreamSessionManager``), newly arrived streams are admitted into
+retired slots mid-flight (continuous batching over neuron state), and every
+reply carries the incremental readout plus cumulative cycles/energy for
+that stream alone.  Results are bit-identical to whole-stream serving.
 
 Design (scaled-down vLLM-style):
   * a request queue feeds a PREFILL worker (one request at a time — CPU
@@ -162,6 +171,11 @@ class SNNRequest:
     readout: Optional[np.ndarray] = None   # filled on completion
     submitted_at: float = 0.0
     done_at: Optional[float] = None
+    # Streaming-path extras: progress + cumulative chip cost for this stream.
+    cursor: int = 0                        # timesteps delivered so far
+    first_reply_at: Optional[float] = None
+    cycles: int = 0
+    energy_uj: float = 0.0
 
 
 class SNNServer:
@@ -214,6 +228,64 @@ class SNNServer:
         return True
 
 
+class StreamingSNNServer:
+    """Stateful continuous-batching server over persistent Vmem sessions.
+
+    The SNN mirror of :class:`Server`'s decode loop: a fixed bank of
+    ``capacity`` slots, each holding one live stream's neuron state inside a
+    ``StreamSessionManager``; every ``step()`` delivers each live stream's
+    next ``chunk_T`` event frames and advances all slots in one fixed-shape
+    jitted ``run_chunk``.  Finished streams retire and free their slot for
+    the next waiter; idle slots ride along as all-zero spike tiles that the
+    zero-skip path eliminates.
+    """
+
+    def __init__(self, engine, capacity: int = 4, chunk_T: int = 2):
+        from repro.engine import StreamSessionManager
+
+        self.sessions = StreamSessionManager(engine, capacity=capacity,
+                                             chunk_T=chunk_T)
+        self.chunk_T = chunk_T
+        self.waiting: list = []
+        self.done: list = []
+        self.slots: dict = {}          # slot -> SNNRequest
+
+    def submit(self, req: SNNRequest):
+        req.submitted_at = time.monotonic()
+        self.waiting.append(req)
+
+    def _admit(self):
+        while self.waiting:
+            slot = self.sessions.open()
+            if slot is None:
+                return
+            self.slots[slot] = self.waiting.pop(0)
+
+    def step(self) -> bool:
+        self._admit()
+        if not self.slots:
+            return False
+        chunks = {}
+        for slot, req in self.slots.items():
+            chunks[slot] = req.events[req.cursor:req.cursor + self.chunk_T]
+        updates = self.sessions.step(chunks)
+        now = time.monotonic()
+        for slot, up in updates.items():
+            req = self.slots[slot]
+            req.cursor += chunks[slot].shape[0]
+            # Incremental reply: cumulative readout + chip cost so far.
+            req.readout = up.readout
+            req.cycles, req.energy_uj = up.cycles, up.energy_uj
+            if req.first_reply_at is None:
+                req.first_reply_at = now
+            if req.cursor >= req.events.shape[0]:
+                req.done_at = now
+                self.done.append(req)
+                self.sessions.close(slot)   # free the slot: continuous batching
+                del self.slots[slot]
+        return True
+
+
 def serve_snn(args):
     from repro.configs import spidr_gesture, spidr_optflow
     from repro.core.network import init_params
@@ -234,11 +306,40 @@ def serve_snn(args):
         block=(128, 128, 128),
     )
     engine = build_engine(spec, params, cfg)
-    server = SNNServer(engine, capacity=args.capacity)
 
     make = make_gesture_batch if args.snn == "gesture" else make_flow_batch
     ev, _ = make(jax.random.PRNGKey(1), batch=args.requests,
                  timesteps=spec.timesteps, hw=spec.input_hw)
+
+    if args.streaming:
+        server = StreamingSNNServer(engine, capacity=args.capacity,
+                                    chunk_T=args.chunk_T)
+        for r in range(args.requests):
+            server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
+        t0 = time.monotonic()
+        ticks = 0
+        while server.step():
+            ticks += 1
+        dt = time.monotonic() - t0
+        lat = [r.done_at - r.submitted_at for r in server.done]
+        ttfr = [r.first_reply_at - r.submitted_at for r in server.done]
+        log.info(
+            "streamed %d %s streams (%d timesteps, chunk_T=%d) in %.2fs "
+            "(%.1f streams/s, %d ticks); first-reply p50 %.3fs; "
+            "latency p50 %.3fs; backend=%s",
+            len(server.done), args.snn, spec.timesteps, args.chunk_T, dt,
+            len(server.done) / dt, ticks, float(np.median(ttfr)),
+            float(np.median(lat)), engine.cfg.backend,
+        )
+        cyc = [r.cycles for r in server.done]
+        uj = [r.energy_uj for r in server.done]
+        log.info(
+            "chip estimate/stream (cumulative): %.0f cycles p50, %.1f uJ p50",
+            float(np.median(cyc)), float(np.median(uj)),
+        )
+        return server
+
+    server = SNNServer(engine, capacity=args.capacity)
     for r in range(args.requests):
         server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
 
@@ -280,6 +381,12 @@ def main():
     ap.add_argument("--weight-bits", type=int, default=4, choices=[4, 6, 8])
     ap.add_argument("--jnp", action="store_true",
                     help="SNN path: pure-jnp backend instead of Pallas")
+    ap.add_argument("--streaming", action="store_true",
+                    help="SNN path: stateful streaming serving — events "
+                         "arrive in chunks, Vmem persists per slot between "
+                         "chunks, replies are incremental")
+    ap.add_argument("--chunk-T", type=int, default=2, dest="chunk_T",
+                    help="timesteps per delivered chunk in --streaming mode")
     args = ap.parse_args()
 
     if args.snn:

@@ -13,6 +13,14 @@ synthesize event-camera-like data with the same statistical structure:
 
 Everything is deterministic given the seed, making tests and the Fig 16
 trade-off reproducible.
+
+Streaming: a live DVS sensor never hands you a complete ``(T, ...)`` tensor.
+``make_gesture_chunk`` / ``make_flow_chunk`` synthesize any window
+``[t0, t0 + chunk_T)`` of the *same* stream a whole-batch call would
+produce (each timestep depends only on the absolute ``t`` and the stream's
+seed-derived parameters), so concatenating consecutive chunks is
+bit-identical to the whole-stream tensor — the property the streaming
+engine tests rely on.  ``iter_event_chunks`` wraps that as a generator.
 """
 from __future__ import annotations
 
@@ -22,7 +30,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-__all__ = ["GestureBatch", "FlowBatch", "make_gesture_batch", "make_flow_batch"]
+__all__ = [
+    "GestureBatch",
+    "FlowBatch",
+    "iter_event_chunks",
+    "make_flow_batch",
+    "make_flow_chunk",
+    "make_gesture_batch",
+    "make_gesture_chunk",
+]
 
 N_GESTURE_CLASSES = 11  # IBM DVS gestures has 11 classes
 
@@ -56,42 +72,70 @@ def _moving_edge_frame(t, hw, angle, speed, phase, key, noise=0.002):
     return jnp.stack([on | noise_on, off | noise_off], axis=-1).astype(jnp.float32)
 
 
-@partial(jax.jit, static_argnames=("batch", "timesteps", "hw"))
-def make_gesture_batch(
-    key: jax.Array, batch: int = 16, timesteps: int = 20, hw: tuple = (64, 64)
-):
-    """Class k sweeps an edge at angle ~ 2*pi*k/11 with class-coded speed."""
+def _gesture_stream_params(key: jax.Array, batch: int):
+    """Seed-derived per-stream parameters, shared by batch and chunk paths."""
     k_lbl, k_phase, k_noise = jax.random.split(key, 3)
     labels = jax.random.randint(k_lbl, (batch,), 0, N_GESTURE_CLASSES)
     angles = 2.0 * jnp.pi * labels / N_GESTURE_CLASSES
     speeds = 1.5 + 0.5 * (labels % 3)
     phases = jax.random.uniform(k_phase, (batch,), minval=0.0, maxval=20.0)
+    return labels, angles, speeds, phases, k_noise
 
+
+def _gesture_events(ts, hw, batch, angles, speeds, phases, k_noise):
+    """Event frames for the absolute timesteps ``ts`` of one stream batch."""
     def per_t(t):
         keys = jax.random.split(jax.random.fold_in(k_noise, t), batch)
         return jax.vmap(
             lambda a, sp, ph, kk: _moving_edge_frame(t, hw, a, sp, ph, kk)
         )(angles, speeds, phases, keys)
 
-    events = jax.vmap(per_t)(jnp.arange(timesteps))
+    return jax.vmap(per_t)(ts)
+
+
+@partial(jax.jit, static_argnames=("batch", "timesteps", "hw"))
+def make_gesture_batch(
+    key: jax.Array, batch: int = 16, timesteps: int = 20, hw: tuple = (64, 64)
+):
+    """Class k sweeps an edge at angle ~ 2*pi*k/11 with class-coded speed."""
+    labels, angles, speeds, phases, k_noise = _gesture_stream_params(key, batch)
+    events = _gesture_events(jnp.arange(timesteps), hw, batch,
+                             angles, speeds, phases, k_noise)
     return events, labels
 
 
-@partial(jax.jit, static_argnames=("batch", "timesteps", "hw", "density"))
-def make_flow_batch(
-    key: jax.Array,
-    batch: int = 4,
-    timesteps: int = 10,
-    hw: tuple = (288, 384),
-    density: float = 0.05,
+@partial(jax.jit, static_argnames=("batch", "chunk_T", "hw"))
+def make_gesture_chunk(
+    key: jax.Array, t0, batch: int = 16, chunk_T: int = 4,
+    hw: tuple = (64, 64),
 ):
-    """Random texture translating at a per-sample velocity; GT flow = v."""
+    """Timesteps ``[t0, t0 + chunk_T)`` of the stream ``key`` defines.
+
+    Bit-identical to ``make_gesture_batch(key, ...)[0][t0:t0 + chunk_T]``
+    for any ``t0`` — each frame depends only on the absolute timestep and
+    the seed, so a sensor feed can be synthesized chunk by chunk without
+    ever materializing the whole stream.  ``t0`` may be traced: one
+    compilation serves every chunk position.
+    """
+    labels, angles, speeds, phases, k_noise = _gesture_stream_params(key, batch)
+    events = _gesture_events(t0 + jnp.arange(chunk_T), hw, batch,
+                             angles, speeds, phases, k_noise)
+    return events, labels
+
+
+def _flow_stream_params(key: jax.Array, batch: int, hw: tuple,
+                        density: float):
+    """Seed-derived texture + velocity, shared by batch and chunk paths."""
     h, w = hw
     k_tex, k_vel = jax.random.split(key)
     # Static random texture per sample (binary dots).
     tex = jax.random.bernoulli(k_tex, density, (batch, h, w)).astype(jnp.float32)
     vel = jax.random.uniform(k_vel, (batch, 2), minval=-2.0, maxval=2.0)
+    return tex, vel
 
+
+def _flow_events(ts, tex, vel):
+    """Event frames for the absolute timesteps ``ts`` of one flow batch."""
     def shift(img, dxy):
         # Integer roll (events are discrete); subpixel handled by time.
         dx, dy = jnp.round(dxy[0]).astype(jnp.int32), jnp.round(dxy[1]).astype(jnp.int32)
@@ -104,6 +148,65 @@ def make_flow_batch(
         off = jnp.clip(prev - cur, 0, 1)
         return jnp.stack([on, off], axis=-1)
 
-    events = jax.vmap(per_t)(jnp.arange(timesteps))
+    return jax.vmap(per_t)(ts)
+
+
+@partial(jax.jit, static_argnames=("batch", "timesteps", "hw", "density"))
+def make_flow_batch(
+    key: jax.Array,
+    batch: int = 4,
+    timesteps: int = 10,
+    hw: tuple = (288, 384),
+    density: float = 0.05,
+):
+    """Random texture translating at a per-sample velocity; GT flow = v."""
+    h, w = hw
+    tex, vel = _flow_stream_params(key, batch, hw, density)
+    events = _flow_events(jnp.arange(timesteps), tex, vel)
     flow = jnp.broadcast_to(vel[:, None, None, :], (batch, h, w, 2))
     return events, flow
+
+
+@partial(jax.jit, static_argnames=("batch", "chunk_T", "hw", "density"))
+def make_flow_chunk(
+    key: jax.Array,
+    t0,
+    batch: int = 4,
+    chunk_T: int = 4,
+    hw: tuple = (288, 384),
+    density: float = 0.05,
+):
+    """Timesteps ``[t0, t0 + chunk_T)`` of the flow stream ``key`` defines.
+
+    Bit-identical to ``make_flow_batch(key, ...)[0][t0:t0 + chunk_T]`` —
+    the texture/velocity are seed-derived (shared ``_flow_stream_params``)
+    and each frame depends only on the absolute timestep.
+    """
+    h, w = hw
+    tex, vel = _flow_stream_params(key, batch, hw, density)
+    events = _flow_events(t0 + jnp.arange(chunk_T), tex, vel)
+    flow = jnp.broadcast_to(vel[:, None, None, :], (batch, h, w, 2))
+    return events, flow
+
+
+def iter_event_chunks(
+    key: jax.Array,
+    total_T: int,
+    chunk_T: int,
+    batch: int = 1,
+    hw: tuple = (64, 64),
+    kind: str = "gesture",
+):
+    """Generator over consecutive ``(t, B, H, W, 2)`` chunks of one stream.
+
+    Yields ``ceil(total_T / chunk_T)`` chunks whose concatenation is
+    bit-identical to the corresponding whole-stream batch; the final chunk
+    is shorter when ``chunk_T`` does not divide ``total_T``.  This is the
+    shape of a live sensor feed: the consumer (``engine.run_chunk`` or a
+    ``StreamSessionManager`` slot) sees events only as they "arrive".
+    """
+    assert kind in ("gesture", "flow"), kind
+    make = make_gesture_chunk if kind == "gesture" else make_flow_chunk
+    for t0 in range(0, total_T, chunk_T):
+        ev, _ = make(key, t0, batch=batch, chunk_T=chunk_T, hw=hw)
+        yield ev[: min(chunk_T, total_T - t0)]

@@ -1,0 +1,27 @@
+"""Docs can't rot: every ```python block in README.md and docs/*.md must
+execute (the same check CI's `docs` job runs via tools/check_docs.py)."""
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_docs import DEFAULT_FILES, extract_python_blocks, run_file  # noqa: E402
+
+DOC_FILES = [p for p in DEFAULT_FILES if p.exists()]
+
+
+def test_docs_exist_and_have_snippets():
+    assert DOC_FILES, "no doc files found"
+    total = sum(
+        len(list(extract_python_blocks(p.read_text()))) for p in DOC_FILES
+    )
+    assert total >= 3, "expected runnable python examples in the docs"
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_every_python_snippet_runs(path):
+    failures = run_file(path)
+    assert not failures, f"{len(failures)} failing snippet(s) in {path.name}"

@@ -1,0 +1,401 @@
+"""Streaming stateful serving: chunked-engine exactness under any chunking,
+session-manager slot lifecycle, per-slot cost attribution, and O(1)-in-T
+memory of the carry-threaded accumulators."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import spidr_gesture
+from repro.core.layers import SpikingConvParams, SpikingDenseParams
+from repro.core.network import SNNLayer, SNNSpec, init_params
+from repro.core.neuron import NeuronConfig
+from repro.core.quant import QuantSpec
+from repro.engine import (
+    EngineConfig,
+    StreamSessionManager,
+    build_engine,
+    init_state,
+    run_chunk,
+    run_engine,
+)
+from repro.snn.data import (
+    iter_event_chunks,
+    make_flow_batch,
+    make_gesture_batch,
+    make_gesture_chunk,
+)
+
+
+def _mini_spec(readout="rate", hw=(16, 16), timesteps=6):
+    n = NeuronConfig(model="lif", reset="soft", threshold=0.5, leak_shift=3)
+    return SNNSpec(
+        name="mini", input_hw=hw, in_channels=2, timesteps=timesteps,
+        layers=(
+            SNNLayer("conv", 2, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("pool"),
+            SNNLayer("conv", 8, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("adaptive_pool", target_hw=2),
+            SNNLayer("fc", 32, 5, fc=SpikingDenseParams(n)),
+        ),
+        readout=readout,
+    )
+
+
+def _engine(spec, seed=0, **over):
+    params = init_params(jax.random.PRNGKey(seed), spec)
+    cfg = EngineConfig(QuantSpec(over.pop("bits", 4)), interpret=True,
+                       block=(64, 64, 64), **over)
+    return build_engine(spec, params, cfg)
+
+
+def _events(spec, batch, seed=0, sparsity=0.9):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.random((spec.timesteps, batch) + spec.input_hw + (2,)) > sparsity)
+        .astype(np.float32))
+
+
+def _run_chunked(engine, events, bounds):
+    """Drive run_chunk over the chunking given by ``bounds`` offsets."""
+    state = init_state(engine, events.shape[1])
+    out = None
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        state, out = run_chunk(engine, state, events[lo:hi])
+    return state, out
+
+
+class TestChunkedEngine:
+    @pytest.mark.parametrize("backend", ["fused", "jnp"])
+    @pytest.mark.parametrize("chunk_T", [1, 3, 6])
+    def test_any_chunking_matches_whole_stream(self, backend, chunk_T):
+        """Acceptance: chunk_T in {1, 3, T} bit-equals one run_engine call."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend=backend)
+        ev = _events(spec, batch=2)
+        whole = run_engine(eng, ev)
+        bounds = list(range(0, spec.timesteps + 1, chunk_T))
+        state, out = _run_chunked(eng, ev, bounds)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(whole.readout))
+        np.testing.assert_array_equal(
+            np.asarray(state.in_counts).sum(axis=1),
+            np.asarray(whole.input_counts).sum(axis=0))
+        np.testing.assert_array_equal(
+            np.asarray(state.out_counts).sum(axis=1),
+            np.asarray(whole.spike_counts).sum(axis=0))
+
+    def test_uneven_chunking_matches_whole_stream(self):
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=2, seed=1)
+        whole = run_engine(eng, ev)
+        _, out = _run_chunked(eng, ev, [0, 1, 5, 6])
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(whole.readout))
+
+    def test_vmem_readout_chunked(self):
+        """Vmem (flow-style) readout also carries exactly across chunks."""
+        spec = _mini_spec(readout="vmem")
+        spec = SNNSpec(name="mini_vmem", input_hw=spec.input_hw, in_channels=2,
+                       timesteps=spec.timesteps, layers=spec.layers[:3],
+                       readout="vmem")
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=2, seed=2)
+        whole = run_engine(eng, ev)
+        _, out = _run_chunked(eng, ev, [0, 2, 4, 6])
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(whole.readout))
+
+    def test_per_slot_counts_sum_to_batch_counts(self):
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=3, seed=3, sparsity=0.8)
+        state = init_state(eng, 3)
+        _, out = run_chunk(eng, state, ev)
+        np.testing.assert_array_equal(
+            np.asarray(out.slot_input_counts).sum(axis=2),
+            np.asarray(out.input_counts))
+        # Per-slot counts equal each sample's solo run (slots independent).
+        for b in range(3):
+            solo = run_engine(eng, ev[:, b:b + 1])
+            np.testing.assert_array_equal(
+                np.asarray(out.slot_input_counts)[:, :, b],
+                np.asarray(solo.input_counts))
+
+    def test_chunk_readout_snapshots(self):
+        """collect_readouts exposes the cumulative readout at every step."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=1, seed=4)
+        state = init_state(eng, 1)
+        _, out = run_chunk(eng, state, ev, collect_readouts=True)
+        for t in (1, 3, 6):
+            part = run_engine(eng, ev[:t])
+            np.testing.assert_array_equal(np.asarray(out.readouts)[t - 1],
+                                          np.asarray(part.readout))
+
+    def test_long_stream_memory_o1_T512(self):
+        """T=512 reduced-config smoke: accumulators live in the scan carry
+        (collect_counts=False materializes nothing per-timestep), and the
+        chunked path still bit-matches the whole-stream engine."""
+        n = NeuronConfig(model="lif", reset="soft", threshold=0.5, leak_shift=3)
+        spec = SNNSpec(
+            name="long", input_hw=(16, 16), in_channels=2, timesteps=512,
+            layers=(SNNLayer("conv", 2, 4,
+                             conv=SpikingConvParams(3, 3, 1, 1, n)),),
+            readout="vmem",
+        )
+        eng = _engine(spec, backend="jnp")
+        rng = np.random.default_rng(5)
+        ev = jnp.asarray((rng.random((512, 1, 16, 16, 2)) > 0.97)
+                         .astype(np.float32))
+        whole = run_engine(eng, ev)
+        state = init_state(eng, 1)
+        for t0 in range(0, 512, 128):
+            state, _ = run_chunk(eng, state, ev[t0:t0 + 128],
+                                 collect_counts=False)
+        np.testing.assert_array_equal(np.asarray(state.readout_acc),
+                                      np.asarray(whole.readout))
+        np.testing.assert_array_equal(
+            np.asarray(state.in_counts).sum(axis=1),
+            np.asarray(whole.input_counts).sum(axis=0))
+
+
+class TestSessionManager:
+    def test_sessions_bit_exact_vs_whole_stream(self):
+        """Streams multiplexed through the session manager == solo runs."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=2, seed=6, sparsity=0.85)
+        whole = run_engine(eng, ev)
+        mgr = StreamSessionManager(eng, capacity=4, chunk_T=2)
+        s0, s1 = mgr.open(), mgr.open()
+        ev_np = np.asarray(ev)
+        last = {}
+        for t0 in range(0, spec.timesteps, 2):
+            last = mgr.step({s0: ev_np[t0:t0 + 2, 0], s1: ev_np[t0:t0 + 2, 1]})
+        np.testing.assert_array_equal(last[s0].readout,
+                                      np.asarray(whole.readout)[0])
+        np.testing.assert_array_equal(last[s1].readout,
+                                      np.asarray(whole.readout)[1])
+
+    def test_sessions_bit_exact_fused_backend(self):
+        """The acceptance bar holds on the Pallas (interpret) backend too."""
+        spec = _mini_spec(timesteps=2)
+        eng = _engine(spec, backend="fused")
+        ev = _events(spec, batch=1, seed=7, sparsity=0.9)
+        whole = run_engine(eng, ev)
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=1)
+        s0 = mgr.open()
+        ev_np = np.asarray(ev)
+        for t0 in range(spec.timesteps):
+            last = mgr.step({s0: ev_np[t0:t0 + 1, 0]})
+        np.testing.assert_array_equal(last[s0].readout,
+                                      np.asarray(whole.readout)[0])
+
+    def test_slot_retirement_and_reuse_preserve_unrelated_slots(self):
+        """Closing a slot and admitting a new stream into it must not
+        perturb the state of streams living in other slots."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=3, seed=8, sparsity=0.85)
+        whole = run_engine(eng, ev)
+        ev_np = np.asarray(ev)
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=2)
+        sa, sb = mgr.open(), mgr.open()          # stream 0, stream 1
+        mgr.step({sa: ev_np[0:2, 0], sb: ev_np[0:2, 1]})
+        # Stream 0 aborts; its slot is retired and immediately reused by
+        # stream 2, which starts from t=0 while stream 1 is mid-flight.
+        mgr.close(sa)
+        sc = mgr.open()
+        assert sc == sa, "retired slot must be reusable"
+        up = mgr.step({sc: ev_np[0:2, 2], sb: ev_np[2:4, 1]})
+        assert up[sc].timesteps == 2 and up[sb].timesteps == 4
+        last = mgr.step({sc: ev_np[2:4, 2], sb: ev_np[4:6, 1]})
+        # Stream 1 ran to completion across the churn: bit-exact.
+        np.testing.assert_array_equal(last[sb].readout,
+                                      np.asarray(whole.readout)[1])
+        mgr.close(sb)   # done at t=6; enforcement requires closing it
+        # Stream 2, finishing its remaining timesteps, is bit-exact too.
+        final = mgr.step({sc: ev_np[4:6, 2]})
+        np.testing.assert_array_equal(final[sc].readout,
+                                      np.asarray(whole.readout)[2])
+
+    def test_masked_slots_zero_counts_and_zero_energy(self):
+        """Slots without a live stream contribute no spikes and are never
+        charged: their cumulative energy/cycles stay exactly zero."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=1, seed=9, sparsity=0.8)
+        ev_np = np.asarray(ev)
+        mgr = StreamSessionManager(eng, capacity=4, chunk_T=2)
+        s0 = mgr.open()
+        up = {}
+        for t0 in range(0, spec.timesteps, 2):
+            up = mgr.step({s0: ev_np[t0:t0 + 2, 0]})
+        # The live slot accrued cost; the three idle slots accrued none.
+        assert up[s0].energy_uj > 0 and up[s0].cycles > 0
+        idle = [i for i in range(4) if i != s0]
+        assert all(mgr.slot_energy_uj[i] == 0 for i in idle)
+        assert all(mgr.slot_cycles[i] == 0 for i in idle)
+        # And their state never saw a spike: per-slot counts are all zero.
+        in_counts = np.asarray(mgr.state.in_counts)
+        out_counts = np.asarray(mgr.state.out_counts)
+        assert (in_counts[:, idle] == 0).all()
+        assert (out_counts[:, idle] == 0).all()
+        assert (in_counts[:, s0] > 0).any()
+
+    def test_short_final_chunk_snapshots_true_end(self):
+        """A stream whose length is not a chunk_T multiple reads out at its
+        true last timestep — the zero-padded tail never leaks in."""
+        spec = _mini_spec(timesteps=5)
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=1, seed=10, sparsity=0.85)
+        whole = run_engine(eng, ev)
+        ev_np = np.asarray(ev)
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=3)
+        s0 = mgr.open()
+        mgr.step({s0: ev_np[0:3, 0]})
+        last = mgr.step({s0: ev_np[3:5, 0]})     # 2 of 3 timesteps valid
+        assert last[s0].timesteps == 5
+        np.testing.assert_array_equal(last[s0].readout,
+                                      np.asarray(whole.readout)[0])
+
+    def test_cumulative_cycles_chunking_invariant(self):
+        """Per-stream cycle accounting resumes the async-handshake clocks,
+        so the cumulative makespan equals a whole-stream estimate whatever
+        chunk_T the serving layer happens to use."""
+        from repro.engine import estimate_cost
+
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = _events(spec, batch=1, seed=12, sparsity=0.85)
+        whole = run_engine(eng, ev)
+        want = estimate_cost(spec, QuantSpec(4),
+                             np.asarray(whole.input_counts))
+        ev_np = np.asarray(ev)
+        for chunk_T in (1, 2, 3, 6):
+            mgr = StreamSessionManager(eng, capacity=2, chunk_T=chunk_T)
+            s0 = mgr.open()
+            up = {}
+            for t0 in range(0, spec.timesteps, chunk_T):
+                up = mgr.step({s0: ev_np[t0:t0 + chunk_T, 0]})
+            assert up[s0].cycles == want.makespan_cycles, chunk_T
+
+    def test_open_returns_none_when_full(self):
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=1)
+        assert mgr.open() is not None and mgr.open() is not None
+        assert mgr.open() is None
+        assert mgr.occupancy == 2
+
+    def test_contract_violations_raise_instead_of_corrupting(self):
+        """An open slot idling through a tick, or continuing after a short
+        (final) chunk, would silently diverge from the whole-stream result
+        — both are rejected up front."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        ev = np.asarray(_events(spec, batch=1, seed=11))
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=2)
+        s0, s1 = mgr.open(), mgr.open()
+        # s1 delivers nothing while open: refused.
+        with pytest.raises(AssertionError, match="delivered no chunk"):
+            mgr.step({s0: ev[0:2, 0]})
+        mgr.close(s1)
+        mgr.step({s0: ev[0:2, 0]})
+        # A short chunk ends the stream; delivering more is refused.
+        mgr.step({s0: ev[2:3, 0]})
+        with pytest.raises(AssertionError, match="short"):
+            mgr.step({s0: ev[3:5, 0]})
+        mgr.close(s0)   # the sanctioned path out
+        assert mgr.occupancy == 0
+
+
+class TestPipelineResume:
+    def test_resumed_simulation_matches_whole_stream(self):
+        """Chunked pipeline pricing with carried state reproduces every
+        whole-stream quantity (makespan, sync baseline, busy counters, and
+        the derived speedup/utilization), for an uneven chunking."""
+        from repro.core.pipeline import simulate_pipeline
+
+        rng = np.random.default_rng(0)
+        cc = rng.integers(100, 900, (12, 9))
+        whole = simulate_pipeline(cc)
+        st, res = None, None
+        for lo, hi in ((0, 1), (1, 5), (5, 12)):
+            res = simulate_pipeline(cc[lo:hi], state=st)
+            st = res.state
+        assert res.makespan == whole.makespan
+        assert res.sync_makespan == whole.sync_makespan
+        np.testing.assert_array_equal(res.cm_busy, whole.cm_busy)
+        assert res.nu_busy == whole.nu_busy
+        assert res.speedup_vs_sync == whole.speedup_vs_sync
+        np.testing.assert_array_equal(res.cm_utilization,
+                                      whole.cm_utilization)
+
+
+class TestStreamingServer:
+    def test_serves_more_streams_than_capacity_bit_exact(self):
+        from repro.launch.serve import SNNRequest, StreamingSNNServer
+
+        spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
+        params = init_params(jax.random.PRNGKey(0), spec)
+        eng = build_engine(spec, params,
+                           EngineConfig(QuantSpec(4), backend="jnp"))
+        ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=5,
+                                   timesteps=6, hw=(16, 16))
+        whole = run_engine(eng, ev)
+        server = StreamingSNNServer(eng, capacity=2, chunk_T=2)
+        for r in range(5):
+            server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
+        ticks = 0
+        while server.step():
+            ticks += 1
+            assert ticks < 100, "server did not drain"
+        assert len(server.done) == 5
+        assert not server.slots and server.sessions.occupancy == 0
+        for req in server.done:
+            np.testing.assert_array_equal(
+                np.asarray(req.readout), np.asarray(whole.readout)[req.rid])
+            assert req.cycles > 0 and req.energy_uj > 0
+            assert req.first_reply_at is not None
+            assert req.done_at >= req.first_reply_at
+
+
+class TestChunkedData:
+    def test_gesture_chunks_concat_to_whole_batch(self):
+        k = jax.random.PRNGKey(2)
+        whole, labels = make_gesture_batch(k, batch=2, timesteps=7,
+                                           hw=(16, 16))
+        cat = jnp.concatenate(
+            list(iter_event_chunks(k, 7, 3, batch=2, hw=(16, 16))))
+        np.testing.assert_array_equal(np.asarray(cat), np.asarray(whole))
+        ch, lbl = make_gesture_chunk(k, 4, batch=2, chunk_T=2, hw=(16, 16))
+        np.testing.assert_array_equal(np.asarray(ch),
+                                      np.asarray(whole)[4:6])
+        np.testing.assert_array_equal(np.asarray(lbl), np.asarray(labels))
+
+    def test_flow_chunks_concat_to_whole_batch(self):
+        k = jax.random.PRNGKey(3)
+        whole, _ = make_flow_batch(k, batch=2, timesteps=5, hw=(16, 16))
+        cat = jnp.concatenate(
+            list(iter_event_chunks(k, 5, 2, batch=2, hw=(16, 16),
+                                   kind="flow")))
+        np.testing.assert_array_equal(np.asarray(cat), np.asarray(whole))
+
+    def test_generator_feeds_session_bit_exact(self):
+        """A sensor-style chunked feed through a session == whole stream."""
+        spec = _mini_spec()
+        eng = _engine(spec, backend="jnp")
+        k = jax.random.PRNGKey(4)
+        whole, _ = make_gesture_batch(k, batch=1, timesteps=6, hw=(16, 16))
+        ref = run_engine(eng, whole)
+        mgr = StreamSessionManager(eng, capacity=2, chunk_T=2)
+        s0 = mgr.open()
+        last = {}
+        for chunk in iter_event_chunks(k, 6, 2, batch=1, hw=(16, 16)):
+            last = mgr.step({s0: np.asarray(chunk)[:, 0]})
+        np.testing.assert_array_equal(last[s0].readout,
+                                      np.asarray(ref.readout)[0])

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Docs smoke check: extract and exec every ```python block in the docs.
+
+Documentation rots when its examples silently stop running.  This tool
+walks README.md and docs/*.md, pulls out every fenced ```python block, and
+executes each one in a fresh namespace (snippet stdout suppressed unless it
+fails).  CI runs it as the `docs` job; `tests/test_docs.py` runs the same
+checks under pytest so a stale snippet fails locally too.
+
+Rules for doc authors:
+  * every ```python block must be self-contained and runnable on CPU in a
+    few seconds (use reduced configs, the jnp backend, or interpret=True);
+  * shell examples belong in ```bash blocks (not executed here);
+  * illustrative pseudo-code belongs in plain ``` blocks.
+
+Usage: PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+
+
+def extract_python_blocks(text: str):
+    """Yield (first_line_number, source) for each ```python fence."""
+    lines = text.splitlines()
+    block, start, in_block = [], 0, False
+    for i, line in enumerate(lines, 1):
+        if not in_block and line.strip() == "```python":
+            in_block, block, start = True, [], i + 1
+        elif in_block and line.strip() == "```":
+            in_block = False
+            yield start, "\n".join(block)
+        elif in_block:
+            block.append(line)
+
+
+def run_file(path: pathlib.Path) -> list:
+    """Exec every python block in ``path``; return a list of failures."""
+    failures = []
+    for lineno, src in extract_python_blocks(path.read_text()):
+        name = f"{path.name}:{lineno}"
+        buf = io.StringIO()
+        try:
+            code = compile(src, name, "exec")
+            with contextlib.redirect_stdout(buf):
+                exec(code, {"__name__": f"__doc_snippet_{lineno}__"})
+            print(f"PASS {name}")
+        except Exception as e:  # noqa: BLE001 - report and keep going
+            print(f"FAIL {name}: {type(e).__name__}: {e}")
+            out = buf.getvalue()
+            if out:
+                print(out, end="")
+            failures.append((name, e))
+    return failures
+
+
+def main(argv=None) -> int:
+    files = [pathlib.Path(a) for a in (argv or sys.argv[1:])] or DEFAULT_FILES
+    failures = []
+    for path in files:
+        failures += run_file(path)
+    n = len(failures)
+    print(f"{'FAILED' if n else 'OK'}: {n} failing snippet(s) "
+          f"across {len(files)} file(s)")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
