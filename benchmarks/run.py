@@ -20,20 +20,49 @@ the reproduced quantity vs the paper's reported value.
                          whole-stream batch at several occupancy levels —
                          throughput, latency, and exactness of the
                          persistent-Vmem session path
+  compiler_multicore     (compiler): single- vs 4-core compiled execution
+                         at 60/90/95% input sparsity — exactness, per-core
+                         cycles, routing overhead, load imbalance
 
 ``python benchmarks/run.py`` runs everything; ``--streaming`` runs only the
-streaming-vs-whole-stream ablation.
+streaming-vs-whole-stream ablation; ``--smoke`` runs a reduced
+compiler/engine subset sized for CI.  Ablations that feed the cross-PR perf
+trajectory also append machine-readable records to ``BENCH_compiler.json``
+(``--out`` to relocate): one object per ablation with cycles, energy,
+wall time and sparsity.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import numpy as np
 
+# Machine-readable results accumulated across ablations, written to
+# ``BENCH_compiler.json`` by ``main`` so the perf trajectory is trackable
+# across PRs (CI uploads the file as an artifact).
+RESULTS: list = []
+
 
 def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+def _record(name: str, **fields):
+    RESULTS.append({"name": name, **fields})
+
+
+def _write_results(path: str) -> None:
+    payload = {
+        "schema": 1,
+        "suite": "spidr-benchmarks",
+        "results": RESULTS,
+    }
+    p = pathlib.Path(path)
+    p.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {len(RESULTS)} records to {p}")
 
 
 def _timeit(fn, n=3):
@@ -313,6 +342,90 @@ def engine_zero_skip():
              f"skip_vs_dense_wall={us_dense/max(us,1):.2f}x")
 
 
+def compiler_multicore(smoke: bool = False):
+    """Compiler ablation: single-core vs compiled 4-core execution.
+
+    Runs the reduced gesture network through the multi-core compiler
+    (``compile_network`` -> ``compile_engine``) at 60/90/95% input
+    sparsity and reports, per sparsity level: bit-exactness of the 4-core
+    engine vs the single-core path, wall time for both, the modeled
+    single-core makespan vs the multi-core per-core makespans (max =
+    plan latency), the spike-routing overhead, and the load-imbalance
+    metric.  The crossover is the point: routing costs cycles per spike,
+    so the multi-core plan wins only once sparsity (or per-core load)
+    is high enough — exactly the trade the partitioner's cost model makes.
+
+    Every level appends machine-readable records (cycles, energy, wall
+    time, sparsity) to ``BENCH_compiler.json`` for cross-PR tracking.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compiler import compile_network
+    from repro.configs import spidr_gesture
+    from repro.core.network import init_params
+    from repro.core.quant import QuantSpec
+    from repro.engine import (
+        EngineConfig, build_engine, compile_engine, estimate_cost,
+        estimate_multicore_cost, run_engine,
+    )
+
+    hw = (16, 16) if smoke else (32, 32)
+    timesteps = 2 if smoke else 4
+    n_cores = 4
+    spec = spidr_gesture.reduced(hw=hw, timesteps=timesteps)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    qspec = QuantSpec(4)
+    eng = build_engine(spec, params, EngineConfig(qspec, backend="jnp"))
+    schedule = compile_network(spec, n_cores=n_cores, qspec=qspec)
+    meng = compile_engine(eng, schedule)
+
+    rng = np.random.default_rng(0)
+    for s in (0.60, 0.90, 0.95):
+        ev = jnp.asarray(
+            (rng.random((timesteps, 1) + spec.input_hw + (2,)) > s)
+            .astype(np.float32)
+        )
+        out1 = run_engine(eng, ev)
+        out4 = run_engine(meng, ev)
+        us1 = _timeit(lambda: jax.block_until_ready(run_engine(eng, ev)), n=1)
+        us4 = _timeit(lambda: jax.block_until_ready(run_engine(meng, ev)), n=1)
+        exact = bool(
+            (np.asarray(out1.readout) == np.asarray(out4.readout)).all()
+            and (np.asarray(out1.spike_counts)
+                 == np.asarray(out4.spike_counts)).all()
+        )
+        counts = np.asarray(out1.input_counts)
+        c1 = estimate_cost(spec, qspec, counts)
+        c4 = estimate_multicore_cost(spec, schedule, counts)
+        _row(f"compiler_s{int(s*100)}_1core", us1,
+             f"makespan={c1.makespan_cycles} uJ={c1.energy_uj:.1f}")
+        _row(
+            f"compiler_s{int(s*100)}_{n_cores}core", us4,
+            f"exact={exact} makespan={c4.makespan_cycles} "
+            f"imbalance={c4.load_imbalance:.2f} "
+            f"routing={int(c4.routing_cycles.sum())} "
+            f"dup={c4.duplication_cycles}",
+        )
+        _record(
+            f"compiler_s{int(s*100)}_1core",
+            ablation="compiler_multicore", n_cores=1, sparsity=s,
+            cycles=int(c1.makespan_cycles), energy_uj=float(c1.energy_uj),
+            wall_us=float(us1), measured_sparsity=float(c1.mean_sparsity),
+        )
+        _record(
+            f"compiler_s{int(s*100)}_{n_cores}core",
+            ablation="compiler_multicore", n_cores=n_cores, sparsity=s,
+            cycles=int(c4.makespan_cycles), energy_uj=float(c4.energy_uj),
+            wall_us=float(us4), measured_sparsity=float(c4.mean_sparsity),
+            exact=exact,
+            per_core_busy_cycles=[int(x) for x in c4.busy_cycles],
+            routing_cycles=int(c4.routing_cycles.sum()),
+            duplication_cycles=int(c4.duplication_cycles),
+            load_imbalance=float(c4.load_imbalance),
+        )
+
+
 def streaming_occupancy():
     """Serving ablation: chunked streaming vs whole-stream batch inference.
 
@@ -389,17 +502,34 @@ ALL = [
     spike_gemm_kernel,
     engine_zero_skip,
     streaming_occupancy,
+    compiler_multicore,
 ]
+
+# CI-sized subset: every ablation that feeds BENCH_compiler.json, on
+# reduced shapes (a compiled-path regression fails this job visibly).
+SMOKE = [lambda: compiler_multicore(smoke=True)]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--streaming", action="store_true",
                     help="run only the streaming-vs-whole-stream ablation")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized subset of the tracked ablations")
+    ap.add_argument("--out", default="BENCH_compiler.json",
+                    help="path for the machine-readable results JSON")
     args = ap.parse_args()
+    if args.streaming:
+        fns = [streaming_occupancy]
+    elif args.smoke:
+        fns = SMOKE
+    else:
+        fns = ALL
     print("name,us_per_call,derived")
-    for fn in [streaming_occupancy] if args.streaming else ALL:
+    for fn in fns:
         fn()
+    if RESULTS:
+        _write_results(args.out)
 
 
 if __name__ == "__main__":

@@ -32,7 +32,13 @@ N_NEURON_MACROS = 3
 
 @dataclasses.dataclass(frozen=True)
 class CoreConfig:
-    """One SpiDR core. ``n_cores`` scales the multi-core extension."""
+    """One SpiDR core.
+
+    ``n_cores`` declares the multi-core extension (paper Sec II-E) — but a
+    single ``map_layer`` call only ever maps one core, so ``n_cores > 1``
+    is rejected there: multi-core partition/place/schedule is
+    :func:`repro.compiler.compile_network`'s job.
+    """
 
     spec: QuantSpec
     n_compute_macros: int = N_COMPUTE_MACROS
@@ -76,15 +82,37 @@ class LayerMapping:
         return self.channel_tiles * self.position_tiles * self.fan_in_tiles
 
 
-def map_layer(shape: LayerShape, core: CoreConfig) -> LayerMapping:
-    """Choose the operating mode and tiling for a layer (Fig 12 logic)."""
+def map_layer(shape: LayerShape, core: CoreConfig,
+              force_mode: int | None = None) -> LayerMapping:
+    """Choose the operating mode and tiling for a layer (Fig 12 logic).
+
+    ``map_layer`` maps a layer onto ONE core.  Multi-core placement is the
+    compiler's job: partitioning a network across a grid of cores (and the
+    per-layer mode/precision/stationarity selection that goes with it) lives
+    in :func:`repro.compiler.compile_network`, which calls ``map_layer`` per
+    core on the partitioned slices.
+
+    ``force_mode`` overrides the fan-in-driven mode choice (the compiler's
+    selector enumerates both modes when both are feasible); ``None`` keeps
+    the paper's Fig 12 rule.
+    """
+    if core.n_cores > 1:
+        raise ValueError(
+            f"map_layer maps a layer onto one SpiDR core, but CoreConfig."
+            f"n_cores={core.n_cores}; use repro.compiler.compile_network to "
+            "partition/place/schedule a network across a multi-core grid "
+            "(it invokes map_layer per core on the partitioned slices)"
+        )
     spec = core.spec
     ch_per_pair = spec.neurons_per_row  # 48 / W_b
 
     mode1_cap = CM_WEIGHT_ROWS * 3
     mode2_cap = CM_WEIGHT_ROWS * core.n_compute_macros
 
-    if shape.fan_in <= mode1_cap:
+    if force_mode is not None and force_mode not in (1, 2):
+        raise ValueError(f"mode must be 1 or 2, got {force_mode}")
+    mode_choice = force_mode or (1 if shape.fan_in <= mode1_cap else 2)
+    if mode_choice == 1:
         mode, pipelines, macros_pp = 1, core.n_neuron_macros, 3
     else:
         mode, pipelines, macros_pp = 2, 1, core.n_compute_macros

@@ -37,13 +37,26 @@ import numpy as np
 from .cim_macro import NEURON_MACRO_CYCLES
 
 __all__ = ["PipelineConfig", "PipelineResult", "PipelineState",
-           "simulate_pipeline"]
+           "ROUTE_CYCLES_PER_SPIKE", "route_cycles", "simulate_pipeline"]
 
 # Per-timestep fixed costs (cycles), derived in DESIGN.md from Table I:
 # reset of partial Vmems + partial-Vmem transfer between units.
 RESET_CYCLES = 32          # reset 32 partial Vmem rows
 TRANSFER_CYCLES = 64       # move 32 Vmem rows between adjacent macros
 PIPE_FILL = 2
+
+# Multi-core extension (Sec II-E): output spikes crossing a core boundary
+# travel as AER packets on the inter-core fabric.  Send + receive each take
+# one cycle at the core's S2A-style front end — the same 2-cycles-per-spike
+# figure as the intra-core sparsity scan (C3/C4), which is what makes the
+# spike-routing overhead model consistent with the rest of the cycle model.
+ROUTE_CYCLES_PER_SPIKE = 2
+
+
+def route_cycles(n_spikes: float,
+                 cycles_per_spike: int = ROUTE_CYCLES_PER_SPIKE) -> int:
+    """Cycles to move ``n_spikes`` AER events across the inter-core fabric."""
+    return int(np.ceil(float(n_spikes) * cycles_per_spike))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,12 @@ tensors (``run_engine``) or chunk by chunk with persistent neuron state
 chunk step with per-slot cost accounting; ``cost`` threads a run's spike
 statistics through the calibrated pipeline/energy models.
 """
-from .cost import EngineCost, estimate_cost
+from .cost import (
+    EngineCost,
+    MulticoreCost,
+    estimate_cost,
+    estimate_multicore_cost,
+)
 from .inference import (
     ChunkOutput,
     EngineConfig,
@@ -16,6 +21,7 @@ from .inference import (
     EngineState,
     SNNEngine,
     build_engine,
+    compile_engine,
     init_state,
     reset_slot,
     run_chunk,
@@ -31,13 +37,16 @@ __all__ = [
     "EngineState",
     "SNNEngine",
     "build_engine",
+    "compile_engine",
     "init_state",
     "reset_slot",
     "run_chunk",
     "run_engine",
     "run_reference",
     "EngineCost",
+    "MulticoreCost",
     "estimate_cost",
+    "estimate_multicore_cost",
     "SlotUpdate",
     "StreamSessionManager",
 ]

@@ -29,6 +29,16 @@ are bit-identical to a single whole-stream call — the chip analogue is Vmem
 staying resident in the CIM macro while events handshake in asynchronously.
 ``run_engine`` itself is just ``init_state`` + one ``run_chunk``.
 
+Multi-core execution: ``compile_engine(engine, schedule)`` bakes a
+``repro.compiler`` :class:`CoreSchedule` into the engine — every weight
+layer's output channels become stacked per-core slices executed over a
+``cores`` axis (``shard_map`` on a real device mesh, lockstep ``vmap``
+emulation on one device) and reassembled by concatenation.  Because the
+integer GEMM + neuron update are column-independent, the multi-core path
+is bit-exact with the single-core path under any chunking, so the chunked
+API below (and the streaming session manager on top of it) work unchanged
+on a compiled plan.
+
 Batch handling: the batch dimension is *folded into the GEMM rows*
 (B output positions x P patches share one weight-stationary pass —
 the TPU analogue of the macro's Vmem-pair weight reuse), or vmapped
@@ -49,11 +59,16 @@ and can be disabled entirely with ``collect_counts=False``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compiler.schedule import CoreSchedule
 from ..core.layers import im2col, maxpool2d
 from ..core.network import SNNSpec
 from ..core.neuron import NeuronConfig, neuron_step_int
@@ -67,6 +82,7 @@ __all__ = [
     "EngineState",
     "SNNEngine",
     "build_engine",
+    "compile_engine",
     "init_state",
     "reset_slot",
     "run_chunk",
@@ -103,6 +119,11 @@ class EngineLayer:
     stride: int = 1
     padding: int = 0
     target_hw: int = 0                    # adaptive pool target
+    # Multi-core placement (set by ``compile_engine`` from a CoreSchedule):
+    # stacked per-core channel slices of ``w_q``, zero-padded to the widest
+    # slice, plus each core's (lo, hi) channel range ((0, 0) = idle core).
+    w_cores: Optional[jax.Array] = None   # (n_cores, F, Kc) int8
+    core_slices: tuple = ()               # per-core (lo, hi), len n_cores
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +131,11 @@ class SNNEngine:
     spec: SNNSpec
     cfg: EngineConfig
     layers: tuple  # of EngineLayer
+    # Multi-core plan (None = single-core).  ``compile_engine`` sets both;
+    # ``device_parallel`` selects shard_map over a "cores" mesh axis (real
+    # devices) vs lockstep vmap emulation (single device).
+    schedule: Optional[CoreSchedule] = None
+    device_parallel: bool = False
 
 
 @dataclasses.dataclass
@@ -208,12 +234,17 @@ def build_engine(spec: SNNSpec, params, cfg: EngineConfig) -> SNNEngine:
 # One fused layer-timestep.
 # ---------------------------------------------------------------------------
 def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
-                  cfg: EngineConfig):
-    """(rows, F) spikes x (F, K) weights + (rows, K) Vmem -> (v', s)."""
+                  cfg: EngineConfig, w_q: Optional[jax.Array] = None):
+    """(rows, F) spikes x (F, K) weights + (rows, K) Vmem -> (v', s).
+
+    ``w_q`` overrides the layer's weights — the multi-core path maps this
+    function over per-core channel slices of the weight matrix.
+    """
     n = el.neuron
+    w = el.w_q if w_q is None else w_q
     if cfg.backend == "fused":
         return fused_lif_gemm_int(
-            s2, el.w_q, v2,
+            s2, w, v2,
             threshold=el.thr_int,
             leak_shift=n.leak_shift if n.model == "lif" else 0,
             soft_reset=(n.reset == "soft"),
@@ -223,7 +254,7 @@ def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
             skip_empty=cfg.skip_empty,
         )
     acc = jnp.dot(
-        s2.astype(jnp.int32), el.w_q.astype(jnp.int32),
+        s2.astype(jnp.int32), w.astype(jnp.int32),
         preferred_element_type=jnp.int32,
     )
     partial = saturate(acc, cfg.qspec)
@@ -234,6 +265,141 @@ def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
     return neuron_step_int(v2, partial, n, cfg.qspec, el.thr_int)
 
 
+# ---------------------------------------------------------------------------
+# Multi-core execution (compiled CoreSchedule): each weight layer's output
+# channels live as per-core slices.  Every core scans the full input spike
+# plane into its own slice's weights (the spike-routing the cost model
+# charges), so per-channel results are identical to the single-core GEMM —
+# integer GEMM + neuron update are column-independent, which is what makes
+# the reassembled output bit-exact.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _cores_mesh(n_cores: int) -> Mesh:
+    """The ``cores`` device mesh axis (first ``n_cores`` local devices)."""
+    return Mesh(np.array(jax.devices()[:n_cores]), ("cores",))
+
+
+def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
+                      cfg: EngineConfig, device_parallel: bool):
+    """Run one layer's per-core channel slices and reassemble the output.
+
+    ``el.w_cores`` is ``(C, F, Kc)``; core ``c`` computes channels
+    ``[lo_c, hi_c)`` against the *same* ``(rows, F)`` spike matrix
+    (replicated — the engine analogue of routing the input spikes to every
+    consumer core).  Idle cores carry zero-width slices padded with zero
+    weights; their results are discarded at reassembly.
+    """
+    n_cores, _, kc = el.w_cores.shape
+
+    def pad_slice(lo, hi):
+        vc = v2[:, lo:hi]
+        if hi - lo < kc:
+            vc = jnp.pad(vc, ((0, 0), (0, kc - (hi - lo))))
+        return vc
+
+    if device_parallel and n_cores > 1:
+        # Full (n_cores, ...) stack: shard_map needs one uniform block per
+        # mesh device, so idle cores ride along with zero weights (they are
+        # idle silicon either way).
+        v_cores = jnp.stack([pad_slice(lo, hi) for lo, hi in el.core_slices])
+        fn = shard_map(
+            lambda wc, vc, sp: jax.vmap(
+                lambda w, v: _fused_update(el, sp, v, cfg, w_q=w))(wc, vc),
+            mesh=_cores_mesh(n_cores),
+            in_specs=(P("cores"), P("cores"), P()),
+            out_specs=(P("cores"), P("cores")),
+            check_rep=False,
+        )
+        v_next, s = fn(el.w_cores, v_cores, s2)
+        row = {c: c for c in range(n_cores)}
+    else:
+        # Lockstep vmapped emulation on one device: only the cores that
+        # actually hold a slice compute — a whole layer placed on one core
+        # must not cost n_cores zero-weight GEMMs.
+        active = tuple(c for c in range(n_cores)
+                       if el.core_slices[c][1] > el.core_slices[c][0])
+        v_cores = jnp.stack([pad_slice(*el.core_slices[c]) for c in active])
+        w_active = el.w_cores[np.asarray(active)]
+        v_next, s = jax.vmap(
+            lambda wc, vc: _fused_update(el, s2, vc, cfg, w_q=wc)
+        )(w_active, v_cores)
+        row = {c: i for i, c in enumerate(active)}
+
+    # Reassemble output channels in slice order (slices are contiguous and
+    # cover [0, K), so concatenation restores the single-core layout).
+    order = sorted(
+        (c for c in row if el.core_slices[c][1] > el.core_slices[c][0]),
+        key=lambda c: el.core_slices[c][0],
+    )
+    v_out = jnp.concatenate(
+        [v_next[row[c], :, : el.core_slices[c][1] - el.core_slices[c][0]]
+         for c in order], axis=1)
+    s_out = jnp.concatenate(
+        [s[row[c], :, : el.core_slices[c][1] - el.core_slices[c][0]]
+         for c in order], axis=1)
+    return v_out, s_out
+
+
+def _layer_update(engine: SNNEngine, el: EngineLayer, s2: jax.Array,
+                  v2: jax.Array):
+    if el.w_cores is not None:
+        return _multicore_update(el, s2, v2, engine.cfg,
+                                 engine.device_parallel)
+    return _fused_update(el, s2, v2, engine.cfg)
+
+
+def compile_engine(engine: SNNEngine, schedule: CoreSchedule,
+                   device_parallel: Optional[bool] = None) -> SNNEngine:
+    """Bake a compiler :class:`CoreSchedule` into an executable engine.
+
+    Splits every weight layer's quantized weights into the schedule's
+    per-core channel slices (stacked, zero-padded to the widest slice) and
+    returns an engine whose ``run_chunk``/``run_engine`` execute the
+    multi-core plan — bit-exactly with the single-core engine, under any
+    chunking, so the streaming session manager works unchanged.
+
+    ``device_parallel=None`` auto-selects: ``shard_map`` over a ``cores``
+    mesh axis when the host has at least ``n_cores`` devices, lockstep
+    ``vmap`` emulation otherwise.
+    """
+    assert engine.schedule is None, "engine already carries a schedule"
+    for ls in schedule.layers:
+        if ls.plan.spec != engine.cfg.qspec:
+            raise ValueError(
+                f"schedule selected {ls.plan.spec} for layer {ls.node} but "
+                f"the engine executes {engine.cfg.qspec}; precision-"
+                "exploring schedules (allowed_specs) are for cost analysis, "
+                "not execution")
+    n_cores = schedule.n_cores
+    by_node = {ls.node: ls for ls in schedule.layers}
+    new_layers = []
+    for idx, el in enumerate(engine.layers):
+        if el.kind not in ("conv", "fc"):
+            new_layers.append(el)
+            continue
+        ls = by_node[idx]
+        k = el.w_q.shape[1]
+        assert k == ls.out_channels, (k, ls.out_channels)
+        kc = max(s.width for s in ls.slices)
+        w_cores = np.zeros((n_cores, el.w_q.shape[0], kc), np.int8)
+        core_slices = [(0, 0)] * n_cores
+        w_np = np.asarray(el.w_q)
+        for s in ls.slices:
+            w_cores[s.core, :, : s.width] = w_np[:, s.lo:s.hi]
+            core_slices[s.core] = (s.lo, s.hi)
+        new_layers.append(dataclasses.replace(
+            el, w_cores=jnp.asarray(w_cores), core_slices=tuple(core_slices)))
+    if device_parallel is None:
+        device_parallel = 1 < n_cores <= len(jax.devices())
+    if device_parallel:
+        assert n_cores <= len(jax.devices()), (
+            f"device_parallel needs {n_cores} devices, "
+            f"host has {len(jax.devices())}")
+    return dataclasses.replace(engine, layers=tuple(new_layers),
+                               schedule=schedule,
+                               device_parallel=bool(device_parallel))
+
+
 def _forward_t(engine: SNNEngine, state, x_t):
     """One timestep through every layer.
 
@@ -242,7 +408,6 @@ def _forward_t(engine: SNNEngine, state, x_t):
     streaming session can attribute spikes (and therefore chip cost) to the
     individual stream occupying each batch slot.
     """
-    cfg = engine.cfg
     act = x_t  # float {0,1} spike plane (im2col needs float)
     new_state, counts_out, counts_in, out = [], [], [], None
     for el, v in zip(engine.layers, state):
@@ -252,9 +417,9 @@ def _forward_t(engine: SNNEngine, state, x_t):
             cols = im2col(act, el.kh, el.kw, el.stride, el.padding)  # (B,P,F)
             rows, f = b * cols.shape[1], cols.shape[2]
             k = el.w_q.shape[1]
-            v_next, s = _fused_update(
-                el, cols.reshape(rows, f).astype(jnp.int8),
-                v.reshape(rows, k), cfg,
+            v_next, s = _layer_update(
+                engine, el, cols.reshape(rows, f).astype(jnp.int8),
+                v.reshape(rows, k),
             )
             v_next = v_next.reshape(v.shape)
             s = s.reshape(v.shape)
@@ -264,7 +429,7 @@ def _forward_t(engine: SNNEngine, state, x_t):
         elif el.kind == "fc":
             flat = act.reshape(act.shape[0], -1)
             counts_in.append(jnp.sum(flat != 0, axis=1))
-            v_next, s = _fused_update(el, flat.astype(jnp.int8), v, cfg)
+            v_next, s = _layer_update(engine, el, flat.astype(jnp.int8), v)
             new_state.append(v_next)
             counts_out.append(jnp.sum(s, axis=1))
             act, out = s.astype(jnp.float32), (v_next, s)

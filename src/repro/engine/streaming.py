@@ -33,6 +33,14 @@ through the manager — whatever the chunk size, whatever else shares the
 batch, however often slots around it are retired and reused — produces
 spikes and readouts bit-identical to a single whole-stream ``run_engine``
 call on that stream alone.
+
+Multi-core plans ride through unchanged: an engine compiled with a
+``repro.compiler`` CoreSchedule (``engine.compile_engine``) has the same
+``run_chunk`` signature and bit-exact outputs, so the session mechanics
+above don't change at all — only the pricing switches to
+``estimate_multicore_cost`` (one resumable handshake clock set per core
+per slot, additive routing cycles), and each ``SlotUpdate`` additionally
+carries the stream's cumulative per-core cycles and load imbalance.
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cost import estimate_cost
+from .cost import estimate_cost, estimate_multicore_cost
 from .inference import SNNEngine, init_state, reset_slot, run_chunk
 
 __all__ = ["SlotUpdate", "StreamSessionManager"]
@@ -59,6 +67,11 @@ class SlotUpdate:
     chunk_spikes: int            # output spikes this chunk (all layers)
     cycles: int                  # cumulative async-pipeline makespan cycles
     energy_uj: float             # cumulative calibrated energy
+    # Multi-core plans only (engine compiled with a CoreSchedule): the
+    # stream's cumulative per-core cycle attribution and the current load
+    # imbalance (max/mean busy) of its placement.  None/0 on single core.
+    per_core_cycles: Optional[np.ndarray] = None
+    load_imbalance: float = 0.0
 
 
 class StreamSessionManager:
@@ -96,7 +109,14 @@ class StreamSessionManager:
         # Resumable async-handshake clocks per slot: pricing chunk by chunk
         # with carried state gives the same cumulative makespan as pricing
         # the whole stream at once (chunking-invariant cycle accounting).
+        # Multi-core plans keep one clock set per core (a list per slot)
+        # plus cumulative per-core routing cycles (additive across chunks).
         self._pipe_state = [None] * capacity
+        self._schedule = engine.schedule
+        n_cores = engine.schedule.n_cores if engine.schedule else 1
+        self._slot_route_cycles = np.zeros((capacity, n_cores), np.int64)
+        self.slot_core_cycles = np.zeros((capacity, n_cores), np.int64)
+        self.slot_imbalance = np.ones(capacity, np.float64)
         self.ticks = 0
         # One jitted step for the session's lifetime: fixed (chunk_T,
         # capacity, H, W, C) event shape, fixed state shapes.
@@ -123,6 +143,9 @@ class StreamSessionManager:
                 self.slot_cycles[i] = 0
                 self.slot_energy_uj[i] = 0.0
                 self._pipe_state[i] = None
+                self._slot_route_cycles[i] = 0
+                self.slot_core_cycles[i] = 0
+                self.slot_imbalance[i] = 1.0
                 return i
         return None
 
@@ -177,17 +200,36 @@ class StreamSessionManager:
             # over the chunk's valid timesteps, through the async-pipeline +
             # calibrated-energy models.  Idle slots are never charged.
             counts = slot_in[:t, :, slot]
-            cost = estimate_cost(self.engine.spec, self.engine.cfg.qspec,
-                                 counts,
-                                 pipeline_state=self._pipe_state[slot])
-            self._pipe_state[slot] = cost.pipeline_state
+            per_core_cycles, imbalance = None, 0.0
+            if self._schedule is not None:
+                cost = estimate_multicore_cost(
+                    self.engine.spec, self._schedule, counts,
+                    pipeline_states=self._pipe_state[slot])
+                self._pipe_state[slot] = cost.pipeline_states
+                # Per-core pipeline clocks resume across chunks; routing
+                # cycles are additive — cumulative attribution stays
+                # chunking-invariant, like the single-core path.
+                self._slot_route_cycles[slot] += cost.routing_cycles
+                makespans = np.array(
+                    [pc.makespan_cycles for pc in cost.per_core], np.int64)
+                per_core_cycles = makespans + self._slot_route_cycles[slot]
+                self.slot_core_cycles[slot] = per_core_cycles
+                self.slot_cycles[slot] = int(per_core_cycles.max())
+                self.slot_imbalance[slot] = imbalance = cost.load_imbalance
+                self.slot_energy_uj[slot] += float(cost.energy_uj)
+            else:
+                cost = estimate_cost(self.engine.spec, self.engine.cfg.qspec,
+                                     counts,
+                                     pipeline_state=self._pipe_state[slot])
+                self._pipe_state[slot] = cost.pipeline_state
+                # Resumed clocks make the makespan cumulative since the
+                # stream began — identical to a whole-stream estimate, any
+                # chunking.
+                self.slot_cycles[slot] = int(cost.makespan_cycles)
+                self.slot_energy_uj[slot] += float(cost.energy_uj)
             chunk_spikes = int(slot_out[:t, :, slot].sum())
             self.slot_timesteps[slot] += t
             self.slot_spikes[slot] += chunk_spikes
-            # Resumed clocks make the makespan cumulative since the stream
-            # began — identical to a whole-stream estimate, any chunking.
-            self.slot_cycles[slot] = int(cost.makespan_cycles)
-            self.slot_energy_uj[slot] += float(cost.energy_uj)
             updates[slot] = SlotUpdate(
                 slot=slot,
                 timesteps=int(self.slot_timesteps[slot]),
@@ -197,5 +239,7 @@ class StreamSessionManager:
                 chunk_spikes=chunk_spikes,
                 cycles=int(self.slot_cycles[slot]),
                 energy_uj=float(self.slot_energy_uj[slot]),
+                per_core_cycles=per_core_cycles,
+                load_imbalance=imbalance,
             )
         return updates

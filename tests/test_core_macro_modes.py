@@ -129,3 +129,65 @@ class TestModes:
             for shape in spec.layer_shapes():
                 m = map_layer(shape, core)
                 assert m.total_passes >= 1
+
+    def test_multicore_config_rejected(self):
+        """n_cores > 1 must not be silently ignored: map_layer maps one
+        core; the error points at the compiler entry point."""
+        core = CoreConfig(QuantSpec(4), n_cores=4)
+        with pytest.raises(ValueError, match="compile_network"):
+            map_layer(LayerShape.fc(64, 11), core)
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_mode_boundary_fanin_384(self, bits):
+        """fan_in == 128*3 is the last Mode-1 shape; +1 tips into Mode 2,
+        at every precision pair (the partitioner slices right up to these
+        edges)."""
+        core = CoreConfig(QuantSpec(bits))
+        at = map_layer(LayerShape.fc(128 * 3, 8), core)
+        assert at.mode == 1 and at.pipelines == 3
+        assert at.fan_in_tiles == 1
+        assert at.rows_per_macro == 128          # exactly full macros
+        assert at.parallel_channels == 3 * (48 // bits)
+        over = map_layer(LayerShape.fc(128 * 3 + 1, 8), core)
+        assert over.mode == 2 and over.pipelines == 1
+        assert over.fan_in_tiles == 1
+        assert over.parallel_channels == 48 // bits
+
+    @pytest.mark.parametrize("bits", [4, 6, 8])
+    def test_mode_boundary_fanin_1152(self, bits):
+        """fan_in == 128*9 fills Mode 2 exactly; +1 forces sequential
+        fan-in tiling, at every precision pair."""
+        core = CoreConfig(QuantSpec(bits))
+        at = map_layer(LayerShape.fc(128 * 9, 8), core)
+        assert at.mode == 2 and at.fan_in_tiles == 1
+        assert at.rows_per_macro == 128
+        over = map_layer(LayerShape.fc(128 * 9 + 1, 8), core)
+        assert over.mode == 2 and over.fan_in_tiles == 2
+        # Balanced tiling (Sec II-F): both tiles near-equal rows.
+        assert over.rows_per_macro == 65
+
+    @pytest.mark.parametrize("bits,vbits,chs", [(4, 7, 12), (6, 11, 8),
+                                                (8, 15, 6)])
+    def test_precision_pairs(self, bits, vbits, chs):
+        """All three supported weight/Vmem pairs and their row packing."""
+        spec = QuantSpec(bits)
+        assert spec.vmem_bits == vbits
+        assert spec.neurons_per_row == chs
+        core = CoreConfig(spec)
+        m = map_layer(LayerShape.conv(3, 3, 16, 48, 8, 8), core)  # fan-in 144
+        assert m.mode == 1
+        assert m.parallel_channels == 3 * chs
+        assert m.channel_tiles == -(-48 // (3 * chs))
+
+    def test_force_mode_override(self):
+        """The compiler's selector can force Mode 2 below the Mode-1 cap
+        (and Mode 1 above it, with fan-in tiling)."""
+        core = CoreConfig(QuantSpec(4))
+        small = LayerShape.fc(100, 8)
+        forced2 = map_layer(small, core, force_mode=2)
+        assert forced2.mode == 2 and forced2.pipelines == 1
+        big = LayerShape.fc(500, 8)
+        forced1 = map_layer(big, core, force_mode=1)
+        assert forced1.mode == 1 and forced1.fan_in_tiles == 2
+        with pytest.raises(ValueError):
+            map_layer(small, core, force_mode=3)
