@@ -23,17 +23,25 @@ the reproduced quantity vs the paper's reported value.
   compiler_multicore     (compiler): single- vs 4-core compiled execution
                          at 60/90/95% input sparsity — exactness, per-core
                          cycles, routing overhead, load imbalance
+  qat_sweep              (train->deploy): deploy-exact QAT training at
+                         every weight/Vmem precision pair, exported and
+                         compiled onto 1 and 4 cores — deployed
+                         accuracy/AEE vs modeled cycles/energy, with the
+                         train->deploy round trip asserted bit-exact
 
 ``python benchmarks/run.py`` runs everything; ``--streaming`` runs only the
-streaming-vs-whole-stream ablation; ``--smoke`` runs a reduced
-compiler/engine subset sized for CI.  Ablations that feed the cross-PR perf
-trajectory also append machine-readable records to ``BENCH_compiler.json``
-(``--out`` to relocate): one object per ablation with cycles, energy,
-wall time and sparsity.
+streaming-vs-whole-stream ablation; ``--qat-sweep`` only the train->deploy
+precision sweep; ``--smoke`` runs a reduced compiler/engine/QAT subset
+sized for CI.  Ablations that feed the cross-PR perf trajectory also append
+machine-readable records to ``BENCH_compiler.json`` (``--out`` to
+relocate): one object per ablation with cycles, energy, wall time and
+sparsity — ``tools/check_bench.py`` diffs that file against the committed
+``benchmarks/baseline.json`` to gate regressions in CI.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import time
@@ -185,7 +193,7 @@ def fig16_accuracy_energy(steps: int = 120):
     """Accuracy/energy trade-off at 4/6/8-bit (trend; synthetic data)."""
     import jax
 
-    from repro.core.energy import HW, chunk_energy_total_nj, cycles_per_chunk
+    from repro.core.energy import chunk_energy_total_nj
     from repro.core.network import gesture_net
     from repro.snn.data import make_gesture_batch
     from repro.snn.train import TrainConfig, evaluate, init_train_state, train_step
@@ -426,6 +434,100 @@ def compiler_multicore(smoke: bool = False):
         )
 
 
+def qat_sweep(smoke: bool = False):
+    """Train->deploy ablation: the Fig 16 trade-off as a deployable pipeline.
+
+    For each weight/Vmem precision pair (4/7, 6/11, 8/15): train the
+    reduced gesture net (plus, in the full run, the reduced optical-flow
+    net) with the deploy-exact QAT forward for a smoke budget, fold the
+    weights into the engine's integer format (``snn.export``), deploy
+    through the multi-core compiler on 1 and 4 cores, and report the
+    *deployed* accuracy/AEE together with the modeled cycles/energy — the
+    accuracy-vs-energy reconfigurability trade the paper claims (C2).
+    Every combination appends a machine-readable record, and a broken
+    train->deploy round trip raises — full/nightly runs fail loudly, not
+    only through the JSON gate.
+
+    The train+export loop is ``snn.train.precision_sweep`` itself (one
+    source of truth); this ablation layers the deployment costs on top.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.quant import QuantSpec
+    from repro.engine import estimate_cost, estimate_multicore_cost, run_engine
+    from repro.snn.export import deploy, dequantize_readout, verify_roundtrip
+    from repro.snn.train import (
+        TrainConfig, effective_spec, make_batch_fn, precision_sweep, spec_for,
+    )
+
+    steps = 4 if smoke else 30
+    tasks = ("gesture",) if smoke else ("gesture", "optical-flow")
+    for task in tasks:
+        spec0 = spec_for(task)
+        hw = (16, 16) if (smoke or task != "gesture") else (32, 32)
+        cfg0 = TrainConfig(
+            lr=4e-3, steps=steps, warmup=1, batch=4 if smoke else 8,
+            hw=hw, timesteps=2 if smoke else 4, seed=0, eval_batches=1,
+        )
+        sweep = precision_sweep(task, bits=(4, 6, 8), cfg=cfg0, spec=spec0)
+        for bits, res in sweep.items():
+            cfg = dataclasses.replace(cfg0, weight_bits=bits)
+            qspec = QuantSpec(bits)
+            state, history, exported = (res["state"], res["history"],
+                                        res["exported"])
+            train_us = history["wall_s"] / steps * 1e6
+            espec = effective_spec(spec0, cfg)
+            # 32 eval samples: the accuracy quantum (1/32) stays below
+            # check_bench's default --tol-metric so single-sample flips on
+            # a dependency bump cannot trip the CI gate.
+            ev, target = make_batch_fn(espec, cfg, batch=32)(
+                jax.random.PRNGKey(123))
+
+            eng1 = deploy(exported, espec)
+            out1 = run_engine(eng1, ev)
+            rt = verify_roundtrip(state.params, espec, eng1, ev, exported,
+                                  engine_out=out1)
+            readout = dequantize_readout(exported, espec, out1.readout)
+            if espec.readout == "rate":
+                metric, value = "accuracy", float(
+                    jnp.mean(jnp.argmax(readout, axis=-1) == target))
+            else:
+                metric, value = "aee", float(
+                    jnp.mean(jnp.linalg.norm(readout - target, axis=-1)))
+            counts = np.asarray(out1.input_counts)
+            c1 = estimate_cost(espec, qspec, counts)
+
+            eng4 = deploy(exported, espec, n_cores=4)
+            out4 = run_engine(eng4, ev)
+            exact4 = rt.exact and bool(
+                (np.asarray(out1.readout) == np.asarray(out4.readout)).all())
+            c4 = estimate_multicore_cost(espec, eng4.schedule, counts)
+            assert rt.exact, (
+                f"train->deploy parity broken for {task} @ {bits}b: {rt}")
+            assert exact4, (
+                f"4-core deployment diverged for {task} @ {bits}b")
+
+            _row(f"qat_{task}_{bits}b", train_us,
+                 f"{metric}={value:.3f} roundtrip_exact={rt.exact} "
+                 f"loss={history['loss'][-1]:.3f}")
+            _row(f"qat_{task}_{bits}b_deploy", 0.0,
+                 f"1core_cycles={c1.makespan_cycles} uJ={c1.energy_uj:.2f} "
+                 f"4core_cycles={c4.makespan_cycles} uJ={c4.energy_uj:.2f} "
+                 f"4core_exact={exact4}")
+            common = dict(ablation="qat_sweep", task=task, weight_bits=bits,
+                          metric=metric, metric_value=value,
+                          train_loss=float(history["loss"][-1]))
+            _record(f"qat_{task}_{bits}b_1core", n_cores=1,
+                    cycles=int(c1.makespan_cycles),
+                    energy_uj=float(c1.energy_uj), exact=bool(rt.exact),
+                    wall_us=float(train_us), **common)
+            _record(f"qat_{task}_{bits}b_4core", n_cores=4,
+                    cycles=int(c4.makespan_cycles),
+                    energy_uj=float(c4.energy_uj), exact=exact4,
+                    wall_us=float(train_us), **common)
+
+
 def streaming_occupancy():
     """Serving ablation: chunked streaming vs whole-stream batch inference.
 
@@ -503,17 +605,21 @@ ALL = [
     engine_zero_skip,
     streaming_occupancy,
     compiler_multicore,
+    qat_sweep,
 ]
 
 # CI-sized subset: every ablation that feeds BENCH_compiler.json, on
-# reduced shapes (a compiled-path regression fails this job visibly).
-SMOKE = [lambda: compiler_multicore(smoke=True)]
+# reduced shapes (a compiled-path or train->deploy regression fails this
+# job visibly).
+SMOKE = [lambda: compiler_multicore(smoke=True), lambda: qat_sweep(smoke=True)]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--streaming", action="store_true",
                     help="run only the streaming-vs-whole-stream ablation")
+    ap.add_argument("--qat-sweep", action="store_true",
+                    help="run only the train->deploy precision sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized subset of the tracked ablations")
     ap.add_argument("--out", default="BENCH_compiler.json",
@@ -521,6 +627,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.streaming:
         fns = [streaming_occupancy]
+    elif args.qat_sweep:
+        fns = [lambda: qat_sweep(smoke=args.smoke)]
     elif args.smoke:
         fns = SMOKE
     else:

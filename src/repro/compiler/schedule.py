@@ -34,7 +34,7 @@ import jax
 
 from ..core.network import SNNSpec
 from ..core.quant import QuantSpec
-from .ir import NetworkGraph, build_graph
+from .ir import build_graph
 from .partition import CoreGrid, LayerPartition, partition_graph
 from .select import LayerPlan, select_layer
 

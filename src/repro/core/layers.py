@@ -10,9 +10,13 @@ GEMM multiplication-free).  We mirror that structure exactly:
     partial Vmem (B, P, K) = spike_gemm(im2col, W)
     neuron macro: full Vmem update + fire + reset   (neuron.py)
 
-Two execution paths share this structure:
+Three execution paths share this structure:
   * ``mode="train"``  — float weights fake-quantized with STE (QAT);
     surrogate-gradient spike function; differentiable end to end.
+  * ``mode="qat"``    — deploy-exact QAT: per-channel power-of-two fake
+    quant, scaled saturation and the digital leak shift, so the forward
+    spike train is bit-identical to the exported integer engine
+    (``snn.export``) while staying differentiable end to end.
   * ``mode="int"``    — int8 weights, int32 Vmem with (2W-1)-bit
     saturation: bit-exact with the macro datapath (tests cross-check
     against ``cim_macro.accumulate_sequential``).
@@ -29,8 +33,15 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .neuron import NeuronConfig, neuron_step, neuron_step_int
-from .quant import QuantSpec, quantize, saturate, ste_quantize
+from .neuron import NeuronConfig, neuron_step, neuron_step_int, neuron_step_qat
+from .quant import (
+    QuantSpec,
+    quantize,
+    requantize_threshold,
+    saturate,
+    ste_quantize,
+    ste_quantize_po2_scaled,
+)
 
 __all__ = [
     "SpikingConvParams",
@@ -47,6 +58,18 @@ __all__ = [
 def _default_matmul(spikes: jax.Array, w: jax.Array) -> jax.Array:
     """(…, F) x (F, K) — contraction over fan-in."""
     return jnp.einsum("...f,fk->...k", spikes, w)
+
+
+def _exact_matmul(spikes: jax.Array, w: jax.Array) -> jax.Array:
+    """Full-float32 contraction for the deploy-exact QAT path.
+
+    The bit-exactness contract needs every product/partial sum held as an
+    exact ``scale * <integer>`` in float32; TPU's default matmul precision
+    lowers f32 GEMMs to bf16 MXU passes (8 mantissa bits — the fan-in
+    accumulations need ~18), so the qat path pins the highest precision.
+    """
+    return jnp.einsum("...f,fk->...k", spikes, w,
+                      precision=jax.lax.Precision.HIGHEST)
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +130,17 @@ def init_dense(key, n_in, n_out, dtype=jnp.float32, gain: float = 3.0):
     return jax.random.uniform(key, (n_in, n_out), dtype, minval=-scale, maxval=scale)
 
 
+def _qat_update(current, scale, vmem, neuron: NeuronConfig, spec: QuantSpec):
+    """Deploy-exact QAT tail shared by conv/dense: saturate the scaled
+    current (the column-adder ``partial`` image), requantize the threshold
+    onto the layer's power-of-two grid, and step the neuron.  ``scale`` is
+    the fake-quant's own per-channel scale (shape ``(1, K)``)."""
+    scale = jax.lax.stop_gradient(scale)[0]  # (K,)
+    _, thr_scaled = requantize_threshold(neuron.threshold, scale, spec)
+    current = jnp.clip(current, scale * spec.v_min, scale * spec.v_max)
+    return neuron_step_qat(vmem, current, neuron, spec, scale, thr_scaled)
+
+
 def spiking_conv(
     spikes: jax.Array,          # (B, H, W, C) binary
     w: jax.Array,               # (kh*kw*C, K) float (train) or int8 (int)
@@ -127,6 +161,14 @@ def spiking_conv(
         wq = ste_quantize(w, spec.weight_bits)
         current = matmul(cols, wq).reshape(b, h_out, w_out, k)
         return neuron_step(vmem, current, p.neuron)
+
+    if mode == "qat":
+        wq, scale = ste_quantize_po2_scaled(w, spec.weight_bits, 0)
+        mm = matmul if matmul is not _default_matmul else _exact_matmul
+        return _qat_update(
+            mm(cols, wq).reshape(b, h_out, w_out, k),
+            scale, vmem, p.neuron, spec,
+        )
 
     # Integer (bit-exact) path.
     assert w.dtype == jnp.int8 and w_scale is not None
@@ -153,6 +195,11 @@ def spiking_dense(
         wq = ste_quantize(w, spec.weight_bits)
         current = matmul(spikes, wq)
         return neuron_step(vmem, current, p.neuron)
+
+    if mode == "qat":
+        wq, scale = ste_quantize_po2_scaled(w, spec.weight_bits, 0)
+        mm = matmul if matmul is not _default_matmul else _exact_matmul
+        return _qat_update(mm(spikes, wq), scale, vmem, p.neuron, spec)
 
     assert w.dtype == jnp.int8 and w_scale is not None
     acc = matmul(spikes.astype(jnp.int32), w.astype(jnp.int32))

@@ -206,6 +206,11 @@ def run_snn(
 ):
     """Run all timesteps via lax.scan.
 
+    ``mode`` selects the execution contract per layer (see ``core.layers``):
+    ``"train"`` (float QAT, per-tensor STE), ``"qat"`` (deploy-exact QAT —
+    the forward spike train is bit-identical to the exported integer
+    engine) or ``"int"`` (quantized integer datapath).
+
     Returns the readout:
       * "rate": (B, n_classes) summed output spikes (rate code)
       * "vmem": (B, H, W, 2) final-layer Vmem (flow regression)

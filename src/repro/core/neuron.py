@@ -31,7 +31,15 @@ import jax.numpy as jnp
 
 from .quant import QuantSpec, saturate
 
-__all__ = ["NeuronConfig", "if_step", "lif_step", "neuron_step", "spike_surrogate"]
+__all__ = [
+    "NeuronConfig",
+    "if_step",
+    "lif_step",
+    "neuron_step",
+    "neuron_step_int",
+    "neuron_step_qat",
+    "spike_surrogate",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,10 +75,30 @@ def _spike_bwd(width, res, g):
     x = (v - threshold) / width
     surr = jnp.maximum(0.0, 1.0 - jnp.abs(x)) / width
     dv = g * surr
-    return dv, -jnp.sum(dv) if jnp.ndim(threshold) == 0 else -dv
+    if jnp.ndim(threshold) == 0:
+        dthr = -jnp.sum(dv)
+    else:
+        # Per-channel thresholds broadcast against v: reduce the cotangent
+        # back down to the threshold's shape (sum over broadcast axes).
+        extra = tuple(range(jnp.ndim(dv) - jnp.ndim(threshold)))
+        dthr = -jnp.sum(dv, axis=extra)
+    return dv, dthr
 
 
 spike_surrogate.defvjp(_spike_fwd, _spike_bwd)
+
+
+# --------------------------------------------------------------------------
+# STE floor: the digital leak shift V <- V - (V >> k) is floor division; in
+# the deploy-exact QAT forward it appears as ``v - scale*floor(v_int * 2^-k)``
+# and needs a pass-through gradient so the leak contributes ``1 - 2^-k``.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def _floor_ste(x: jax.Array) -> jax.Array:
+    return jnp.floor(x)
+
+
+_floor_ste.defvjp(lambda x: (_floor_ste(x), None), lambda _res, g: (g,))
 
 
 # --------------------------------------------------------------------------
@@ -130,4 +158,48 @@ def neuron_step_int(
         v_next = v * (1 - s)
     else:
         v_next = saturate(v - s * threshold_int, spec)
+    return v_next, s
+
+
+# --------------------------------------------------------------------------
+# Deploy-exact QAT dynamics (float forward, surrogate gradients) — the exact
+# scaled image of ``neuron_step_int`` under a power-of-two ``scale``.
+# --------------------------------------------------------------------------
+def neuron_step_qat(
+    v: jax.Array,
+    current: jax.Array,
+    cfg: NeuronConfig,
+    spec: QuantSpec,
+    scale: jax.Array,
+    threshold_scaled: jax.Array,
+):
+    """One deploy-exact QAT timestep: ``(v_next, spikes)``.
+
+    ``v`` and ``current`` are floats of the form ``scale * <integer>``
+    (``current`` already saturated to the scaled Vmem range by the layer);
+    ``scale`` is the layer's power-of-two weight scale and
+    ``threshold_scaled = scale * thr_int`` the requantized threshold.
+    Because the scale is a power of two, every operation below computes
+    ``scale *`` (the corresponding integer-datapath operation) exactly:
+    the emitted spike train is bit-identical to ``neuron_step_int`` on the
+    folded integers — while gradients flow through the triangle surrogate,
+    pass-through clips and the STE floor of the leak shift.
+
+    Deployment convention (matches the engine/kernels): the leak applies
+    only when ``leak_shift > 0`` — shift 0 means "no leak", not "hard
+    decay", so an exported LIF layer reproduces exactly.
+    """
+    scale = jax.lax.stop_gradient(scale)
+    threshold_scaled = jax.lax.stop_gradient(threshold_scaled)
+    lo, hi = scale * spec.v_min, scale * spec.v_max
+    if cfg.model == "lif" and cfg.leak_shift > 0:
+        # Digital leak V <- V - (V >> k): arithmetic shift is floor division,
+        # mirrored here on the scaled grid with an STE floor.
+        v = v - scale * _floor_ste(v / scale * (2.0 ** -cfg.leak_shift))
+    v = jnp.clip(v + current, lo, hi)
+    s = spike_surrogate(v, threshold_scaled, cfg.surrogate_width)
+    if cfg.reset == "hard":
+        v_next = v * (1.0 - s)
+    else:
+        v_next = jnp.clip(v - s * threshold_scaled, lo, hi)
     return v_next, s

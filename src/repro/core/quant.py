@@ -34,9 +34,14 @@ __all__ = [
     "SUPPORTED_PRECISIONS",
     "quantize",
     "dequantize",
+    "po2_scale",
+    "po2_quantize",
+    "requantize_threshold",
     "sat_add",
     "saturate",
     "ste_quantize",
+    "ste_quantize_po2",
+    "ste_quantize_po2_scaled",
     "fake_quant",
 ]
 
@@ -124,6 +129,51 @@ def sat_add(v: jax.Array, w: jax.Array, spec: QuantSpec) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# Deploy-exact quantization: power-of-two per-channel scales.
+#
+# The train->deploy contract (snn/export.py) requires the float QAT forward
+# to be an *exact* scaled image of the integer datapath.  With an arbitrary
+# float scale that is impossible (every float multiply rounds); with a
+# power-of-two scale every product/sum in the training graph is
+# ``scale * <integer>`` held exactly in float32 (integers stay far below
+# 2**24), so saturation bounds, thresholds and the leak shift all commute
+# with the scaling — spike trains match the integer engine bit for bit.
+# --------------------------------------------------------------------------
+def po2_scale(w: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:
+    """Smallest power-of-two scale whose grid covers ``|w|`` per channel."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=axis is not None)
+    amax = jnp.where(amax == 0, float(spec.w_max), amax)  # all-zero -> scale 1
+    return jnp.exp2(jnp.ceil(jnp.log2(amax / spec.w_max))).astype(jnp.float32)
+
+
+def po2_quantize(w: jax.Array, spec: QuantSpec, axis=None):
+    """Symmetric quantization onto a power-of-two grid.
+
+    Returns ``(q, scale)`` with ``q`` int8 and ``scale`` a power of two
+    (per-channel when ``axis`` selects the reduction axis).  Shared verbatim
+    by the QAT fake-quant forward (``ste_quantize_po2``) and the exporter
+    (``snn.export``), so the deployed integers are *definitionally* the ones
+    training saw.
+    """
+    scale = po2_scale(w, spec, axis)
+    q = jnp.clip(jnp.round(w / scale), spec.w_min, spec.w_max)
+    return q.astype(jnp.int8), scale
+
+
+def requantize_threshold(threshold, scale: jax.Array, spec: QuantSpec):
+    """Fold a float firing threshold onto a layer's integer Vmem grid.
+
+    Returns ``(thr_int, thr_scaled)`` with ``thr_scaled = thr_int * scale``
+    exactly (power-of-two ``scale``).  ``thr_int`` is clipped to
+    ``[v_min, v_max + 1]``: above ``v_max`` the saturated Vmem can never
+    reach it (the neuron never fires — identically in float and integer),
+    below ``v_min`` it always fires.
+    """
+    t = jnp.clip(jnp.round(threshold / scale), spec.v_min, spec.v_max + 1)
+    return t.astype(jnp.int32), (t * scale).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
 # QAT: straight-through estimator.  Forward = fake-quantized weights,
 # backward = identity.  This is what lets us train the paper's two networks
 # at 4/6/8-bit and reproduce the Fig 16 accuracy/energy trade-off.
@@ -144,6 +194,37 @@ def _ste_bwd(weight_bits, _res, g):
 
 
 ste_quantize.defvjp(_ste_fwd, _ste_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_quantize_po2_scaled(w: jax.Array, weight_bits: int, axis=0):
+    """Deploy-exact fake-quant: per-channel power-of-two scales, STE grad.
+
+    Forward returns ``(q * scale, scale)`` — the exact float image of the
+    integers the exporter emits, plus the scale it used (so callers that
+    need the scale — saturation bounds, threshold requantization — don't
+    recompute the abs-max reduction).  Backward is the identity into ``w``;
+    the scale output carries no gradient.
+    """
+    spec = QuantSpec(weight_bits)
+    q, scale = po2_quantize(w, spec, axis)
+    return dequantize(q, scale), scale
+
+
+def _ste_po2_fwd(w, weight_bits, axis):
+    return ste_quantize_po2_scaled(w, weight_bits, axis), None
+
+
+def _ste_po2_bwd(weight_bits, axis, _res, g):
+    return (g[0],)
+
+
+ste_quantize_po2_scaled.defvjp(_ste_po2_fwd, _ste_po2_bwd)
+
+
+def ste_quantize_po2(w: jax.Array, weight_bits: int, axis=0) -> jax.Array:
+    """``ste_quantize_po2_scaled`` without the scale output."""
+    return ste_quantize_po2_scaled(w, weight_bits, axis)[0]
 
 # Alias used by the LM serving path.
 fake_quant = ste_quantize

@@ -49,6 +49,11 @@ tests assert it.  Sharding the folded batch over a mesh data axis is a
 Everything is integer once weights are quantized: per-layer ``QuantSpec``
 precision (W_b-bit weights, (2W-1)-bit Vmem), integer thresholds derived
 from the float threshold and the layer's quantization scale.
+``build_engine`` quantizes with per-tensor scales (scalar thresholds);
+trained networks arrive through ``snn.export.deploy`` with per-channel
+power-of-two scales and per-channel integer threshold vectors — both
+execute on the same layer update, and the exported form is bit-identical
+to the QAT training graph (``run_snn(mode="qat")``).
 
 Memory: all readout/count accumulators are threaded through the scan
 *carry* (O(1) in T), never recomputed from stacked per-timestep outputs —
@@ -112,8 +117,11 @@ class EngineLayer:
     kind: str                     # "conv" | "fc" | "pool" | "adaptive_pool"
     neuron: Optional[NeuronConfig] = None
     w_q: Optional[jax.Array] = None       # int8 quantized weights
-    w_scale: Optional[float] = None       # float scale (w ~= w_q * scale)
-    thr_int: int = 0                      # integer threshold at this scale
+    w_scale: Optional[object] = None      # scale (w ~= w_q * scale): float
+                                          # (per-tensor) or (K,) array
+                                          # (per-channel exported networks)
+    thr_int: object = 0                   # integer threshold at this scale:
+                                          # int, or (K,) int32 per-channel
     kh: int = 0
     kw: int = 0
     stride: int = 1
@@ -124,6 +132,9 @@ class EngineLayer:
     # slice, plus each core's (lo, hi) channel range ((0, 0) = idle core).
     w_cores: Optional[jax.Array] = None   # (n_cores, F, Kc) int8
     core_slices: tuple = ()               # per-core (lo, hi), len n_cores
+    # Per-core slices of a per-channel ``thr_int`` (padding gets v_max+1 so
+    # padded channels never spike); None when ``thr_int`` is a scalar.
+    thr_cores: Optional[jax.Array] = None  # (n_cores, Kc) int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -234,18 +245,22 @@ def build_engine(spec: SNNSpec, params, cfg: EngineConfig) -> SNNEngine:
 # One fused layer-timestep.
 # ---------------------------------------------------------------------------
 def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
-                  cfg: EngineConfig, w_q: Optional[jax.Array] = None):
+                  cfg: EngineConfig, w_q: Optional[jax.Array] = None,
+                  thr=None):
     """(rows, F) spikes x (F, K) weights + (rows, K) Vmem -> (v', s).
 
-    ``w_q`` overrides the layer's weights — the multi-core path maps this
-    function over per-core channel slices of the weight matrix.
+    ``w_q``/``thr`` override the layer's weights and integer threshold —
+    the multi-core path maps this function over per-core channel slices of
+    the weight matrix (and, for per-channel-quantized layers, of the
+    threshold vector).
     """
     n = el.neuron
     w = el.w_q if w_q is None else w_q
+    thr = el.thr_int if thr is None else thr
     if cfg.backend == "fused":
         return fused_lif_gemm_int(
             s2, w, v2,
-            threshold=el.thr_int,
+            threshold=thr,
             leak_shift=n.leak_shift if n.model == "lif" else 0,
             soft_reset=(n.reset == "soft"),
             vmem_bits=cfg.qspec.vmem_bits,
@@ -262,7 +277,7 @@ def _fused_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
     # would compute v - (v >> 0) = 0, so route that case through IF dynamics.
     if n.model == "lif" and n.leak_shift == 0:
         n = dataclasses.replace(n, model="if")
-    return neuron_step_int(v2, partial, n, cfg.qspec, el.thr_int)
+    return neuron_step_int(v2, partial, n, cfg.qspec, thr)
 
 
 # ---------------------------------------------------------------------------
@@ -297,20 +312,33 @@ def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
             vc = jnp.pad(vc, ((0, 0), (0, kc - (hi - lo))))
         return vc
 
+    # Per-core operands mapped over the ``cores`` axis: the weight slices,
+    # plus (for per-channel-quantized layers) the threshold slices.  A
+    # scalar threshold stays baked into the kernel via ``el.thr_int``.
+    per_core_ops = [el.w_cores]
+    if el.thr_cores is not None:
+        per_core_ops.append(el.thr_cores)
+
+    def core_update(sp, blocks):
+        """One core's slice: ``blocks`` = (w, [thr,] v)."""
+        w, *thr, v = blocks
+        return _fused_update(el, sp, v, cfg, w_q=w,
+                             thr=thr[0] if thr else None)
+
     if device_parallel and n_cores > 1:
         # Full (n_cores, ...) stack: shard_map needs one uniform block per
         # mesh device, so idle cores ride along with zero weights (they are
         # idle silicon either way).
         v_cores = jnp.stack([pad_slice(lo, hi) for lo, hi in el.core_slices])
         fn = shard_map(
-            lambda wc, vc, sp: jax.vmap(
-                lambda w, v: _fused_update(el, sp, v, cfg, w_q=w))(wc, vc),
+            lambda sp, *blocks: jax.vmap(
+                lambda *bs: core_update(sp, bs))(*blocks),
             mesh=_cores_mesh(n_cores),
-            in_specs=(P("cores"), P("cores"), P()),
+            in_specs=(P(),) + (P("cores"),) * (len(per_core_ops) + 1),
             out_specs=(P("cores"), P("cores")),
             check_rep=False,
         )
-        v_next, s = fn(el.w_cores, v_cores, s2)
+        v_next, s = fn(s2, *per_core_ops, v_cores)
         row = {c: c for c in range(n_cores)}
     else:
         # Lockstep vmapped emulation on one device: only the cores that
@@ -318,11 +346,10 @@ def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
         # must not cost n_cores zero-weight GEMMs.
         active = tuple(c for c in range(n_cores)
                        if el.core_slices[c][1] > el.core_slices[c][0])
+        idx = np.asarray(active)
         v_cores = jnp.stack([pad_slice(*el.core_slices[c]) for c in active])
-        w_active = el.w_cores[np.asarray(active)]
-        v_next, s = jax.vmap(
-            lambda wc, vc: _fused_update(el, s2, vc, cfg, w_q=wc)
-        )(w_active, v_cores)
+        v_next, s = jax.vmap(lambda *bs: core_update(s2, bs))(
+            *[op[idx] for op in per_core_ops], v_cores)
         row = {c: i for i, c in enumerate(active)}
 
     # Reassemble output channels in slice order (slices are contiguous and
@@ -384,11 +411,20 @@ def compile_engine(engine: SNNEngine, schedule: CoreSchedule,
         w_cores = np.zeros((n_cores, el.w_q.shape[0], kc), np.int8)
         core_slices = [(0, 0)] * n_cores
         w_np = np.asarray(el.w_q)
+        # Per-channel-quantized layers carry their threshold vector along
+        # the same channel slices; padding gets v_max+1 (never fires).
+        per_channel = np.ndim(el.thr_int) > 0
+        thr_cores = np.full((n_cores, kc), engine.cfg.qspec.v_max + 1,
+                            np.int32) if per_channel else None
         for s in ls.slices:
             w_cores[s.core, :, : s.width] = w_np[:, s.lo:s.hi]
             core_slices[s.core] = (s.lo, s.hi)
+            if per_channel:
+                thr_cores[s.core, : s.width] = np.asarray(
+                    el.thr_int)[s.lo:s.hi]
         new_layers.append(dataclasses.replace(
-            el, w_cores=jnp.asarray(w_cores), core_slices=tuple(core_slices)))
+            el, w_cores=jnp.asarray(w_cores), core_slices=tuple(core_slices),
+            thr_cores=None if thr_cores is None else jnp.asarray(thr_cores)))
     if device_parallel is None:
         device_parallel = 1 < n_cores <= len(jax.devices())
     if device_parallel:

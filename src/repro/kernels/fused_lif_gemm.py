@@ -33,6 +33,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = ["fused_lif_gemm", "fused_lif_gemm_int", "DEFAULT_BLOCK"]
@@ -78,10 +79,17 @@ def _fused_kernel_f32(
         o_s_ref[...] = s
 
 
-def _fused_kernel_int(
-    s_ref, w_ref, v_ref, o_v_ref, o_s_ref,
-    *, n_k, threshold, leak_shift, soft_reset, v_min, v_max, skip_empty,
+def _fused_int_body(
+    s_ref, w_ref, v_ref, o_v_ref, o_s_ref, get_threshold,
+    *, n_k, leak_shift, soft_reset, v_min, v_max, skip_empty,
 ):
+    """Shared integer kernel body.
+
+    ``get_threshold`` supplies the firing threshold at neuron time: a
+    static scalar (per-tensor quantization) or a ``(1, bn)`` int32 tile
+    read from a threshold operand (per-channel exported networks) — the
+    accumulate/leak/saturate/fire/reset program is identical either way.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -90,16 +98,8 @@ def _fused_kernel_int(
         o_s_ref[...] = jnp.zeros_like(o_s_ref)
 
     s_tile = s_ref[...]
-    if skip_empty:
-        @pl.when(jnp.any(s_tile != 0))
-        def _accumulate():
-            o_v_ref[...] += jax.lax.dot_general(
-                s_tile.astype(jnp.int32),
-                w_ref[...].astype(jnp.int32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32,
-            )
-    else:
+
+    def _accumulate():
         o_v_ref[...] += jax.lax.dot_general(
             s_tile.astype(jnp.int32),
             w_ref[...].astype(jnp.int32),
@@ -107,10 +107,16 @@ def _fused_kernel_int(
             preferred_element_type=jnp.int32,
         )
 
+    if skip_empty:
+        pl.when(jnp.any(s_tile != 0))(_accumulate)
+    else:
+        _accumulate()
+
     @pl.when(k == n_k - 1)
     def _neuron():
         # Column-adder saturation of the accumulated partials (quant.sat_add
         # semantics), then the neuron-macro program on the carried Vmem.
+        threshold = get_threshold()
         partial = jnp.clip(o_v_ref[...], v_min, v_max)
         v = v_ref[...]
         if leak_shift > 0:
@@ -125,7 +131,24 @@ def _fused_kernel_int(
         o_s_ref[...] = s
 
 
-def _fused_call(kernel, s, w, v, out_dtype, block, interpret):
+def _fused_kernel_int(s_ref, w_ref, v_ref, o_v_ref, o_s_ref,
+                      *, threshold, **kw):
+    _fused_int_body(s_ref, w_ref, v_ref, o_v_ref, o_s_ref,
+                    lambda: threshold, **kw)
+
+
+def _fused_kernel_int_vec(s_ref, w_ref, v_ref, t_ref, o_v_ref, o_s_ref, **kw):
+    # t_ref is (1, bn) — one threshold per output channel, broadcast down
+    # the rows at the compare.
+    _fused_int_body(s_ref, w_ref, v_ref, o_v_ref, o_s_ref,
+                    lambda: t_ref[...], **kw)
+
+
+def _fused_call(kernel, s, w, v, out_dtype, block, interpret, thr=None,
+                thr_pad=0):
+    """Shared pallas_call plumbing; ``thr`` adds an optional per-output-
+    channel ``(N,)`` operand (padded with ``thr_pad``), blocked ``(1, bn)``
+    and broadcast down the rows inside the kernel."""
     m, k = s.shape
     k2, n = w.shape
     assert k == k2, (s.shape, w.shape)
@@ -138,14 +161,22 @@ def _fused_call(kernel, s, w, v, out_dtype, block, interpret):
     v = jnp.pad(v, ((0, pad_m), (0, pad_n)))
     gm, gn, gk = s.shape[0] // bm, w.shape[1] // bn, s.shape[1] // bk
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+    ]
+    operands = [s, w, v]
+    if thr is not None:
+        assert thr.shape == (n,), (thr.shape, n)
+        operands.append(
+            jnp.pad(thr, (0, pad_n), constant_values=thr_pad)[None, :])
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+
     v_out, s_out = pl.pallas_call(
         functools.partial(kernel, n_k=gk),
         grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
             pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
@@ -155,7 +186,7 @@ def _fused_call(kernel, s, w, v, out_dtype, block, interpret):
             jax.ShapeDtypeStruct((s.shape[0], w.shape[1]), out_dtype),
         ],
         interpret=interpret,
-    )(s, w, v)
+    )(*operands)
     return v_out[:m, :n], s_out[:m, :n]
 
 
@@ -195,11 +226,53 @@ def fused_lif_gemm(
         "interpret", "skip_empty",
     ),
 )
+def _fused_int_scalar(
+    spikes, weights, v, *, threshold, leak_shift, soft_reset, vmem_bits,
+    block, interpret, skip_empty,
+):
+    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
+    kernel = functools.partial(
+        _fused_kernel_int,
+        threshold=threshold, leak_shift=leak_shift, soft_reset=soft_reset,
+        v_min=v_min, v_max=v_max, skip_empty=skip_empty,
+    )
+    return _fused_call(
+        kernel, spikes.astype(jnp.int8), weights.astype(jnp.int8),
+        v.astype(jnp.int32), jnp.int32, block, interpret,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "leak_shift", "soft_reset", "vmem_bits", "block", "interpret",
+        "skip_empty",
+    ),
+)
+def _fused_int_vec(
+    spikes, weights, v, threshold, *, leak_shift, soft_reset, vmem_bits,
+    block, interpret, skip_empty,
+):
+    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
+    kernel = functools.partial(
+        _fused_kernel_int_vec,
+        leak_shift=leak_shift, soft_reset=soft_reset,
+        v_min=v_min, v_max=v_max, skip_empty=skip_empty,
+    )
+    # Pad channels get threshold v_max+1: a saturated Vmem can never reach
+    # it, so the (discarded) padding never spikes.
+    return _fused_call(
+        kernel, spikes.astype(jnp.int8), weights.astype(jnp.int8),
+        v.astype(jnp.int32), jnp.int32, block, interpret,
+        thr=threshold.astype(jnp.int32), thr_pad=v_max + 1,
+    )
+
+
 def fused_lif_gemm_int(
     spikes: jax.Array,   # (M, K) in {0,1}
     weights: jax.Array,  # (K, N) int8
     v: jax.Array,        # (M, N) int32 holding (2W-1)-bit values
-    threshold: int,
+    threshold,           # int, or (N,) int32 per-channel thresholds
     leak_shift: int = 0,
     soft_reset: bool = False,
     vmem_bits: int = 7,
@@ -211,14 +284,19 @@ def fused_lif_gemm_int(
 
     Equals ``neuron_step_int(v, saturate(spikes @ weights, spec), ...)`` and
     therefore ``accumulate_sequential`` when no intermediate overflow occurs.
+
+    ``threshold`` may be a Python int (per-tensor quantization; baked into
+    the kernel as a compile-time constant, the original behavior) or an
+    ``(N,)`` integer array of per-output-channel thresholds (per-channel
+    exported networks; passed as a kernel operand).
     """
-    v_min, v_max = -(1 << (vmem_bits - 1)), (1 << (vmem_bits - 1)) - 1
-    kernel = functools.partial(
-        _fused_kernel_int,
-        threshold=threshold, leak_shift=leak_shift, soft_reset=soft_reset,
-        v_min=v_min, v_max=v_max, skip_empty=skip_empty,
-    )
-    return _fused_call(
-        kernel, spikes.astype(jnp.int8), weights.astype(jnp.int8),
-        v.astype(jnp.int32), jnp.int32, block, interpret,
-    )
+    kw = dict(leak_shift=leak_shift, soft_reset=soft_reset,
+              vmem_bits=vmem_bits, block=block, interpret=interpret,
+              skip_empty=skip_empty)
+    if isinstance(threshold, (int, np.integer)):
+        return _fused_int_scalar(spikes, weights, v, threshold=int(threshold),
+                                 **kw)
+    threshold = jnp.asarray(threshold)
+    if threshold.ndim == 0:
+        threshold = jnp.broadcast_to(threshold, (weights.shape[1],))
+    return _fused_int_vec(spikes, weights, v, threshold, **kw)

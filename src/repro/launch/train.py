@@ -2,11 +2,18 @@
 
 Runs REAL training on whatever devices exist (CPU here, TPU pod in prod):
   python -m repro.launch.train --arch qwen1.5-0.5b --reduced --steps 50
-  python -m repro.launch.train --arch spidr-gesture --steps 200
+  python -m repro.launch.train --snn gesture --weight-bits 4 --steps 200
+  python -m repro.launch.train --snn optical-flow --weight-bits 8 --reduced
 
 LM archs train on the synthetic token pipeline; the paper's SNNs train on
-synthetic DVS streams.  Fault tolerance: checkpoint every N steps, watchdog,
-straggler stats; resume is automatic from the checkpoint directory.
+synthetic DVS streams.  ``--snn`` runs the full train->deploy QAT pipeline:
+deploy-exact surrogate-gradient training (``snn.train.fit``), export into
+the engine's signed-integer format, checkpoint of both the float params and
+the integer artifact, and a round-trip proof that the deployed engine
+reproduces the training graph's spike trains bit-exactly (on 1 core and,
+when ``--n-cores`` > 1, on the compiled multi-core plan).  Fault tolerance:
+checkpoint every N steps, watchdog, straggler stats; resume is automatic
+from the checkpoint directory.
 """
 from __future__ import annotations
 
@@ -15,7 +22,6 @@ import logging
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs.base import get_config
@@ -23,7 +29,6 @@ from repro.data.pipeline import TokenPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.runtime.loop import LoopConfig, TrainingLoop
-from repro import sharding as S
 
 logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
 log = logging.getLogger("repro.train")
@@ -42,12 +47,7 @@ def train_lm(args):
     opt_state = M.init_opt_state(params)
 
     train_step = M.make_train_step(cfg, lr=args.lr)
-    p_specs = S.param_specs(params)
     with mesh:
-        in_shardings = (
-            jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), p_specs,
-                         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
-        )
         jitted = jax.jit(train_step, donate_argnums=(0, 1))
 
         pipe = TokenPipeline(
@@ -77,39 +77,70 @@ def train_lm(args):
 
 
 def train_snn(args):
-    from repro.core.network import gesture_net, optical_flow_net
-    from repro.snn.data import make_gesture_batch, make_flow_batch
-    from repro.snn.train import TrainConfig, init_train_state, train_step
+    """The train->deploy QAT pipeline for the paper's SNNs.
 
-    spec = gesture_net() if "gesture" in args.arch else optical_flow_net()
-    tcfg = TrainConfig(weight_bits=args.weight_bits, lr=args.lr)
-    state = init_train_state(jax.random.PRNGKey(args.seed), spec, tcfg)
-    key = jax.random.PRNGKey(args.seed + 1)
-    hw = (32, 32) if args.reduced else spec.input_hw
-    ts = 5 if args.reduced else spec.timesteps
+    fit (deploy-exact QAT) -> export integers -> checkpoint both artifacts
+    -> reload -> deploy through the compiler -> prove bit-exact parity.
+    """
+    import os
+
+    from repro.engine import EngineConfig
+    from repro.snn.export import (
+        deploy, export_network, load_exported, save_exported, verify_roundtrip,
+    )
+    from repro.snn.train import (
+        TrainConfig, effective_spec, fit, make_batch_fn, spec_for,
+    )
+
+    task = args.snn or args.arch.removeprefix("spidr-")
+    spec = spec_for(task)
+    hw = (32, 32) if args.reduced and spec.readout == "rate" else None
+    hw = (24, 32) if args.reduced and spec.readout == "vmem" else hw
+    tcfg = TrainConfig(
+        weight_bits=args.weight_bits, lr=args.lr, steps=args.steps,
+        batch=args.batch, seed=args.seed,
+        hw=hw, timesteps=5 if args.reduced else None,
+        ckpt_every=args.ckpt_every,
+    )
     ckpt = Checkpointer(args.ckpt_dir)
-    history = []
-    for step in range(args.steps):
-        key, k = jax.random.split(key)
-        if spec.readout == "rate":
-            ev, target = make_gesture_batch(k, batch=args.batch, timesteps=ts, hw=hw)
-        else:
-            ev, target = make_flow_batch(k, batch=args.batch, timesteps=ts, hw=hw)
-        state, metrics = train_step(state, (ev, target), spec, tcfg)
-        history.append(float(metrics["loss"]))
-        if step % 10 == 0:
-            extras = {k_: round(float(v), 4) for k_, v in metrics.items()}
-            log.info("step %d %s", step, extras)
-        if (step + 1) % args.ckpt_every == 0:
-            ckpt.save_async(step + 1, state.params)
-    ckpt.wait()
-    log.info("done: loss %.4f -> %.4f", history[0], history[-1])
-    return history
+    state, history = fit(spec, tcfg, ckpt=ckpt)
+
+    # Fold into the integer engine format and persist both artifacts.
+    from repro.core.quant import QuantSpec
+
+    run_spec = effective_spec(spec, tcfg)
+    exported = export_network(state.params, run_spec, QuantSpec(args.weight_bits))
+    export_ckpt = Checkpointer(os.path.join(args.ckpt_dir, "exported"))
+    save_exported(export_ckpt, args.steps, exported)
+    reloaded = load_exported(export_ckpt, run_spec)
+
+    # Round-trip proof on a fresh stream, single- and multi-core.
+    ev, _ = make_batch_fn(run_spec, tcfg, batch=2)(jax.random.PRNGKey(99))
+    for n_cores in sorted({1, args.n_cores}):
+        engine = deploy(reloaded, run_spec,
+                        EngineConfig(QuantSpec(args.weight_bits), backend="jnp"),
+                        n_cores=n_cores)
+        rt = verify_roundtrip(state.params, run_spec, engine, ev, reloaded)
+        log.info("round-trip %d-core: exact=%s (readout_mismatch=%g, "
+                 "spike_mismatch=%d)", n_cores, rt.exact,
+                 rt.readout_mismatch, rt.spike_mismatch)
+        if not rt.exact:
+            raise SystemExit(
+                f"train->deploy parity broken on {n_cores} core(s): {rt}")
+    log.info("done: loss %.4f -> %.4f, %s=%.4f; exported %d-bit integers "
+             "to %s", history["loss"][0], history["loss"][-1],
+             history["metric"], history["final"], args.weight_bits,
+             export_ckpt.directory)
+    return history["loss"]
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LM arch name, or spidr-gesture / spidr-optical-flow")
+    ap.add_argument("--snn", choices=("gesture", "optical-flow"), default=None,
+                    help="train one of the paper's SNNs through the "
+                         "train->export->deploy QAT pipeline")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -117,11 +148,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--weight-bits", type=int, default=4, choices=(4, 6, 8))
+    ap.add_argument("--n-cores", type=int, default=1,
+                    help="also prove parity on a compiled n-core plan")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--watchdog-s", type=float, default=3600.0)
     args = ap.parse_args()
-    if args.arch.startswith("spidr-"):
+    if args.snn is None and args.arch is None:
+        ap.error("pass --snn gesture|optical-flow or --arch <name>")
+    if args.snn or args.arch.startswith("spidr-"):
         train_snn(args)
     else:
         train_lm(args)

@@ -13,7 +13,7 @@ Dry-run lowers these exact functions abstractly.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

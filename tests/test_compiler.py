@@ -19,7 +19,6 @@ import pytest
 
 from repro.compiler import (
     CoreGrid,
-    CoreSchedule,
     build_graph,
     compile_network,
     partition_graph,

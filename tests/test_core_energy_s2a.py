@@ -7,9 +7,9 @@ try:
 except ImportError:  # dev extra absent: property tests skip, rest run
     from _hypothesis_stub import given, settings, st
 
-from repro.core import energy, s2a, zero_skip
+from repro.core import energy, zero_skip
 from repro.core.energy import HW, TABLE1_PAPER, gops, power_mw, tops_per_watt
-from repro.core.pipeline import PipelineConfig, simulate_pipeline
+from repro.core.pipeline import simulate_pipeline
 from repro.core.s2a import S2AConfig, simulate_s2a, switch_count_batched
 
 

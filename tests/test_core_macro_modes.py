@@ -7,10 +7,8 @@ try:
 except ImportError:  # dev extra absent: property tests skip, rest run
     from _hypothesis_stub import given, settings, st
 
-from repro.core import cim_macro, modes
+from repro.core import modes
 from repro.core.cim_macro import (
-    CM_COLS,
-    CM_WEIGHT_ROWS,
     IFSPAD_COLS,
     IFSPAD_ROWS,
     NEURON_MACRO_CYCLES,

@@ -14,7 +14,6 @@ from repro.configs import get_config
 from repro.data.pipeline import TokenPipeline, synth_tokens
 from repro.models.model import abstract_params
 from repro.optim.compression import (
-    ef_int8_allreduce,
     init_error_state,
     int8_compress,
     int8_decompress,
