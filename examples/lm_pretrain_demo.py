@@ -6,16 +6,23 @@ Exercises the large-scale stack end-to-end on host devices: config system,
 synthetic data pipeline, AdamW, checkpoint/restart (kill it mid-run and
 re-run — it resumes), watchdog + straggler stats.  The same step function
 is what the multi-pod dry-run lowers at (16,16)/(2,16,16).
+
+SPIDR_SMOKE=1 shrinks the step budget for CI.  (This is the LM substrate
+demo — the SNN deployment facade examples are quickstart.py,
+optical_flow_inference.py and train_gesture_snn.py.)
 """
 import argparse
+import os
 
 from repro.launch import train as T
+
+SMOKE = os.environ.get("SPIDR_SMOKE") == "1"
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--steps", type=int, default=12 if SMOKE else 60)
     args = ap.parse_args()
 
     ns = argparse.Namespace(

@@ -8,10 +8,16 @@ Walks the paper's pipeline end to end on synthetic DVS events:
   3. map every layer onto the accelerator (modes, Sec II-E),
   4. report throughput / energy from the calibrated Table I model,
   5. run the same accumulation through the Pallas spike-GEMM kernel,
-  6. serve a whole event stream through the fused multi-timestep engine
-     (bit-exact integer datapath, zero-skipping Pallas kernels) and price
-     the run with the chip cost model.
+  6. deploy through the unified `spidr` facade — one DeployTarget declares
+     precision/backend/cores, `spidr.compile` returns a CompiledSNN that
+     runs whole event streams, prices them on the chip cost model, and
+     proves its own round-trip parity.
+
+SPIDR_SMOKE=1 shrinks frames/timesteps for CI.
 """
+import dataclasses
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,16 +30,22 @@ from repro.kernels.ref import spike_gemm_ref
 from repro.kernels.spike_gemm import spike_gemm
 from repro.snn.data import make_gesture_batch
 
+SMOKE = os.environ.get("SPIDR_SMOKE") == "1"
+
 spec4 = QuantSpec(4)
 print(f"precision: {spec4} (B_vmem = 2*B_w - 1 = {spec4.vmem_bits})")
 
 # 1-2. network + inference ---------------------------------------------------
 net = gesture_net()
 params = init_params(jax.random.PRNGKey(0), net)
-events, labels = make_gesture_batch(jax.random.PRNGKey(1), batch=4,
-                                    timesteps=10, hw=(64, 64))
+events, labels = make_gesture_batch(jax.random.PRNGKey(1),
+                                    batch=2 if SMOKE else 4,
+                                    timesteps=4 if SMOKE else 10,
+                                    hw=(32, 32) if SMOKE else (64, 64))
 sparsity = float(jnp.mean(events == 0))
-logits, _ = run_snn(params, events, net, spec4)
+run_net = net if not SMOKE else dataclasses.replace(
+    net, input_hw=(32, 32), timesteps=4)
+logits, _ = run_snn(params, events, run_net, spec4)
 print(f"input sparsity {sparsity:.1%}; rate-coded logits shape {logits.shape}")
 
 # 3. accelerator mapping ------------------------------------------------------
@@ -58,18 +70,31 @@ out = spike_gemm(jnp.array(spikes), jnp.array(w), interpret=True)
 ok = bool(jnp.all(out == spike_gemm_ref(jnp.array(spikes), jnp.array(w))))
 print(f"\nPallas spike_gemm == oracle: {ok}")
 
-# 6. fused multi-timestep engine ----------------------------------------------
+# 6. the unified deployment facade --------------------------------------------
+# One DeployTarget declares the whole deployment (precision pair, backend,
+# cores, chunking); spidr.compile returns a CompiledSNN owning the fused
+# multi-timestep engine.  .run / .cost / .verify cover the lifecycle —
+# .open_stream / .save / spidr.load are the rest (docs/api.md).
+from repro import spidr
 from repro.configs import spidr_gesture
-from repro.engine import EngineConfig, build_engine, estimate_cost, run_engine
 
-small = spidr_gesture.reduced(hw=(32, 32), timesteps=4)
+small = spidr_gesture.reduced(hw=(16, 16) if SMOKE else (32, 32),
+                              timesteps=2 if SMOKE else 4)
 sparams = init_params(jax.random.PRNGKey(0), small)
-engine = build_engine(small, sparams, EngineConfig(spec4, interpret=True))
+target = spidr.DeployTarget(weight_bits=4, backend="fused", interpret=True)
+compiled = spidr.compile(small, sparams, target)
+print(f"\n{compiled!r}")
+
 sev, _ = make_gesture_batch(jax.random.PRNGKey(2), batch=2,
                             timesteps=small.timesteps, hw=small.input_hw)
-result = run_engine(engine, sev)
-cost = estimate_cost(small, spec4, np.asarray(result.input_counts) / 2)
-print(f"\nfused engine: rate readout {np.asarray(result.readout).tolist()}")
+result = compiled.run(sev)
+# Per-stream chip cost: the engine records whole-batch spike counts, so
+# normalize by the batch size before pricing.
+cost = compiled.cost(
+    input_counts=np.asarray(result.input_counts) / sev.shape[1])
+print(f"fused engine: rate readout {np.asarray(result.readout).tolist()}")
 print(f"chip estimate/stream: {cost.latency_ms:.2f} ms, {cost.energy_uj:.1f} uJ "
       f"at {cost.mean_sparsity:.1%} sparsity (async speedup "
       f"{cost.async_speedup:.2f}x)")
+report = compiled.verify(sev)
+print(f"round-trip parity proof: exact={report.exact}")

@@ -3,39 +3,47 @@
   PYTHONPATH=src python examples/train_gesture_snn.py [--steps 200] [--bits 4]
 
 Surrogate-gradient BPTT + QAT at the chosen SpiDR precision, with
-checkpointing + fault-tolerant loop, then evaluation and the deployment
-summary (energy per inference from the calibrated model).  This is the
-"train a model for a few hundred steps" deliverable (the paper's kind is
-an inference accelerator for small SNNs, so the end-to-end driver trains
-the paper's own workload, not a 100M LM).
+checkpointing + fault-tolerant loop, then evaluation and deployment
+through the unified `spidr` facade (export -> compile -> verify -> cost).
+This is the "train a model for a few hundred steps" deliverable (the
+paper's kind is an inference accelerator for small SNNs, so the
+end-to-end driver trains the paper's own workload, not a 100M LM).
+
+SPIDR_SMOKE=1 shrinks steps/frames/timesteps for CI.
 """
 import argparse
+import dataclasses
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
-from repro.core.energy import chunk_energy_total_nj
-from repro.core.modes import CoreConfig, map_layer
 from repro.core.network import gesture_net
 from repro.core.quant import QuantSpec
 from repro.snn.data import make_gesture_batch
 from repro.snn.train import TrainConfig, evaluate, init_train_state, train_step
 
+SMOKE = os.environ.get("SPIDR_SMOKE") == "1"
+
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=5 if SMOKE else 200)
     ap.add_argument("--bits", type=int, default=4, choices=(4, 6, 8))
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--timesteps", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2 if SMOKE else 8)
+    ap.add_argument("--timesteps", type=int, default=2 if SMOKE else 8)
+    ap.add_argument("--hw", type=int, default=16 if SMOKE else 64)
     ap.add_argument("--ckpt", default="/tmp/spidr_gesture_ckpt")
     args = ap.parse_args()
 
     spec = gesture_net()
+    hw = (args.hw, args.hw)
+    run_spec = dataclasses.replace(spec, input_hw=hw,
+                                   timesteps=args.timesteps)
     cfg = TrainConfig(weight_bits=args.bits, lr=2e-3)
-    state = init_train_state(jax.random.PRNGKey(0), spec, cfg)
+    state = init_train_state(jax.random.PRNGKey(0), run_spec, cfg)
     ckpt = Checkpointer(args.ckpt)
     key = jax.random.PRNGKey(1)
 
@@ -45,8 +53,8 @@ def main():
     for step in range(args.steps):
         key, k = jax.random.split(key)
         ev, lbl = make_gesture_batch(k, batch=args.batch,
-                                     timesteps=args.timesteps, hw=(64, 64))
-        state, m = train_step(state, (ev, lbl), spec, cfg)
+                                     timesteps=args.timesteps, hw=hw)
+        state, m = train_step(state, (ev, lbl), run_spec, cfg)
         if step % 20 == 0:
             print(f"  step {step:4d} loss {float(m['loss']):.4f} "
                   f"acc {float(m['accuracy']):.2f}")
@@ -57,20 +65,32 @@ def main():
 
     # Eval on held-out synthetic batches.
     accs = []
-    for i in range(4):
+    for i in range(2 if SMOKE else 4):
         key, k = jax.random.split(key)
         ev, lbl = make_gesture_batch(k, batch=16, timesteps=args.timesteps,
-                                     hw=(64, 64))
-        accs.append(evaluate(state.params, [(ev, lbl)], spec, cfg))
+                                     hw=hw)
+        accs.append(evaluate(state.params, [(ev, lbl)], run_spec, cfg))
     print(f"\ntrained {args.steps} steps in {dt:.1f}s; eval acc "
           f"{np.mean(accs):.2f} (chance 1/11 = 0.09)")
 
-    # Deployment summary from the calibrated accelerator model.
-    core = CoreConfig(QuantSpec(args.bits))
-    passes = sum(map_layer(s, core).total_passes for s in spec.layer_shapes())
-    e_uj = passes * spec.timesteps * chunk_energy_total_nj(0.95) / 1e3
-    print(f"deployed on SpiDR: {passes} macro passes/timestep, "
-          f"~{e_uj:.0f} uJ per inference @95% sparsity (Table I model)")
+    # Deploy through the unified facade: export the QAT integers, compile
+    # onto a target, prove the round trip, and price an inference on the
+    # calibrated chip models.
+    from repro import spidr
+    from repro.snn.export import export_network
+
+    exported = export_network(state.params, run_spec, QuantSpec(args.bits))
+    compiled = spidr.compile(exported, state.params,
+                             spidr.DeployTarget(weight_bits=args.bits),
+                             spec=run_spec)
+    key, k = jax.random.split(key)
+    ev, _ = make_gesture_batch(k, batch=2, timesteps=args.timesteps, hw=hw)
+    report = compiled.verify(ev)
+    cost = compiled.cost(compiled.run(ev))
+    print(f"deployed on SpiDR via {compiled!r}:\n"
+          f"  train->deploy round trip exact={report.exact}; "
+          f"{cost.makespan_cycles} cycles, {cost.energy_uj:.1f} uJ per "
+          f"inference ({cost.mean_sparsity:.1%} measured sparsity)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""SpiDR reproduction — public API.
+
+The supported way in is the ``spidr`` deployment facade: declare a
+:class:`~repro.spidr.DeployTarget` (weight/Vmem precision pair, core
+count, backend, chunking, stream capacity) and compile a network onto it:
+
+    from repro import spidr
+
+    compiled = spidr.compile(spec, params, spidr.DeployTarget(n_cores=4))
+    out = compiled.run(events)
+    cost = compiled.cost(out)
+
+plus the objects needed to construct its inputs: network specs
+(``SNNSpec`` / ``gesture_net`` / ``optical_flow_net`` / ``init_params``),
+the precision configuration (``QuantSpec``) and the trained integer
+artifact (``ExportedNetwork``, produced by ``repro.snn.train`` +
+``repro.snn.export``).
+
+Everything else — ``repro.engine``, ``repro.compiler``, ``repro.kernels``,
+``repro.snn.export`` — is a documented internal layer: importable and
+stable enough for tests and power users, but the facade is the contract
+(``tests/test_public_api.py`` pins this surface).
+"""
+from . import spidr
+from .core.network import SNNSpec, gesture_net, init_params, optical_flow_net
+from .core.quant import SUPPORTED_PRECISIONS, QuantSpec
+from .snn.export import ExportedNetwork
+from .spidr import CompiledSNN, DeployTarget, StreamSession, VerifyReport
+
+__all__ = [
+    # The deployment facade (the primary public API).
+    "spidr",
+    "CompiledSNN",
+    "DeployTarget",
+    "StreamSession",
+    "VerifyReport",
+    # Network construction.
+    "SNNSpec",
+    "gesture_net",
+    "optical_flow_net",
+    "init_params",
+    # Precision configuration.
+    "QuantSpec",
+    "SUPPORTED_PRECISIONS",
+    # Trained integer artifact (deploys via spidr.compile / spidr.load).
+    "ExportedNetwork",
+]

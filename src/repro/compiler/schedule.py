@@ -147,6 +147,8 @@ def compile_network(
     grid: CoreGrid | None = None,
     assumed_sparsity: float = 0.9,
     allowed_specs: tuple | None = None,
+    force_mode: int | None = None,
+    force_stationarity: str | None = None,
 ) -> CoreSchedule:
     """Partition, place and schedule ``spec`` across a grid of SpiDR cores.
 
@@ -160,6 +162,11 @@ def compile_network(
 
     ``assumed_sparsity`` feeds the load-balancing and selection heuristics
     only; any returned schedule executes bit-exactly regardless.
+    ``force_mode`` / ``force_stationarity`` pin the selector's per-layer
+    operating-mode (1/2) and weight-vs-Vmem stationarity choices — the
+    deployment API's reconfigurability overrides (``repro.spidr``'s
+    ``DeployTarget``); like sparsity they only move the modeled cost, never
+    the computed spikes.
     """
     qspec = qspec or QuantSpec(4)
     grid = grid or CoreGrid(n_cores)
@@ -179,7 +186,9 @@ def compile_network(
         placed_shape = dataclasses.replace(
             node.shape, out_channels=widest.width)
         plan = select_layer(node, placed_shape, allowed,
-                            assumed_density=density)
+                            assumed_density=density,
+                            force_mode=force_mode,
+                            force_stationarity=force_stationarity)
         fractions, consumers = _route_fractions(prev_part, part,
                                                 prev_channels, grid.n_cores)
         layers.append(LayerSchedule(

@@ -79,27 +79,35 @@ def select_layer(
     placed_shape: LayerShape,
     allowed_specs: tuple,
     assumed_density: float = 0.1,
+    force_mode: int | None = None,
+    force_stationarity: str | None = None,
 ) -> LayerPlan:
     """Pick (mode, precision, stationarity) minimizing modeled cycles.
 
     ``placed_shape`` is the shape actually landing on one core — the full
     layer, or a channel slice of it.  Primary score is cycles (compute +
     per-pass pipeline overhead + reload traffic); ties break on modeled
-    energy, then on the Fig 12 default mode.
+    energy, then on the Fig 12 default mode.  ``force_mode`` /
+    ``force_stationarity`` pin that dimension of the search to one value
+    (the deployment API's reconfigurability overrides) — the selector then
+    only optimizes over the remaining free dimensions.
     """
     sparsity = 1.0 - assumed_density
     fig12_mode = map_layer(placed_shape, CoreConfig(allowed_specs[0])).mode
+    modes = (force_mode,) if force_mode is not None else (1, 2)
+    stationarities = ((force_stationarity,) if force_stationarity is not None
+                      else ("weight", "vmem"))
     best = None
     for spec in allowed_specs:
         core = CoreConfig(spec)
-        for mode in (1, 2):
+        for mode in modes:
             mapping = map_layer(placed_shape, core, force_mode=mode)
             compute = 2.0 * assumed_density * node.in_positions \
                 * mapping.channel_tiles
             overhead = mapping.total_passes * (RESET_CYCLES + TRANSFER_CYCLES) \
                 + NEURON_MACRO_CYCLES
             energy = mapping.total_passes * chunk_energy_total_nj(sparsity)
-            for stationarity in ("weight", "vmem"):
+            for stationarity in stationarities:
                 traffic = _traffic(mapping, stationarity)
                 plan = LayerPlan(
                     mode=mode,

@@ -7,16 +7,18 @@ Runs a real serving loop on host devices (reduced configs on CPU):
   python -m repro.launch.serve --snn gesture --streaming --chunk-T 2
   python -m repro.launch.serve --snn gesture --n-cores 4 --jnp
 
-The SNN path serves whole DVS event streams through the fused multi-timestep
-engine (``repro.engine``): requests are batched up to a fixed capacity
-(shapes never change -> no recompilation), each batch runs one fused
-scan-over-time inference, and the reply carries the rate/Vmem readout plus
-the chip-cost estimate (cycles/energy) from the calibrated models.
+The SNN path deploys through the unified facade (``repro.spidr``): one
+``DeployTarget`` declares precision/cores/backend/chunking, and the
+resulting ``CompiledSNN`` serves whole DVS event streams — requests are
+batched up to a fixed capacity (shapes never change -> no recompilation),
+each batch runs one fused scan-over-time inference, and the reply carries
+the rate/Vmem readout plus the chip-cost estimate (cycles/energy) from the
+calibrated models.
 
 With ``--streaming`` the SNN path switches to *stateful* serving: each
 request's events are delivered in chunks of ``--chunk-T`` timesteps, live
 streams keep persistent per-slot Vmem between chunks
-(``engine.StreamSessionManager``), newly arrived streams are admitted into
+(``CompiledSNN.open_stream()``), newly arrived streams are admitted into
 retired slots mid-flight (continuous batching over neuron state), and every
 reply carries the incremental readout plus cumulative cycles/energy for
 that stream alone.  Results are bit-identical to whole-stream serving.
@@ -184,19 +186,16 @@ class SNNServer:
 
     Waiting requests are packed into a fixed (T, capacity, H, W, C) batch —
     idle slots carry zero events, which the zero-skipping engine makes nearly
-    free — and one fused engine run serves the whole batch.
+    free — and one fused ``CompiledSNN.run`` serves the whole batch.
     """
 
-    def __init__(self, engine, capacity: int = 4):
-        from repro.engine import run_engine
-
-        self.engine = engine
+    def __init__(self, compiled, capacity: int = 4):
+        self.compiled = compiled
         self.capacity = capacity
         self.waiting: list = []
         self.done: list = []
         self.total_input_counts = None
         self.batches = 0
-        self._run = jax.jit(lambda ev: run_engine(engine, ev))
 
     def submit(self, req: SNNRequest):
         req.submitted_at = time.monotonic()
@@ -213,7 +212,7 @@ class SNNServer:
         )
         for i, req in enumerate(batch):
             ev[:, i] = req.events
-        out = self._run(jnp.asarray(ev))
+        out = self.compiled.run(jnp.asarray(ev))
         readout = np.asarray(out.readout)
         now = time.monotonic()
         for i, req in enumerate(batch):
@@ -234,17 +233,15 @@ class StreamingSNNServer:
 
     The SNN mirror of :class:`Server`'s decode loop: a fixed bank of
     ``capacity`` slots, each holding one live stream's neuron state inside a
-    ``StreamSessionManager``; every ``step()`` delivers each live stream's
-    next ``chunk_T`` event frames and advances all slots in one fixed-shape
-    jitted ``run_chunk``.  Finished streams retire and free their slot for
-    the next waiter; idle slots ride along as all-zero spike tiles that the
-    zero-skip path eliminates.
+    ``CompiledSNN.open_stream()`` session; every ``step()`` delivers each
+    live stream's next ``chunk_T`` event frames and advances all slots in
+    one fixed-shape jitted chunk step.  Finished streams retire and free
+    their slot for the next waiter; idle slots ride along as all-zero spike
+    tiles that the zero-skip path eliminates.
     """
 
-    def __init__(self, engine, capacity: int = 4, chunk_T: int = 2):
-        from repro.engine import StreamSessionManager
-
-        self.sessions = StreamSessionManager(engine, capacity=capacity,
+    def __init__(self, compiled, capacity: int = 4, chunk_T: int = 2):
+        self.sessions = compiled.open_stream(capacity=capacity,
                                              chunk_T=chunk_T)
         self.chunk_T = chunk_T
         self.waiting: list = []
@@ -288,48 +285,39 @@ class StreamingSNNServer:
 
 
 def serve_snn(args):
-    from repro.compiler import compile_network
+    from repro import spidr
     from repro.configs import spidr_gesture, spidr_optflow
     from repro.core.network import init_params
-    from repro.core.quant import QuantSpec
-    from repro.engine import (
-        EngineConfig, build_engine, compile_engine, estimate_cost,
-        estimate_multicore_cost,
-    )
     from repro.snn.data import make_flow_batch, make_gesture_batch
 
     spec = (spidr_gesture.reduced() if args.snn == "gesture"
             else spidr_optflow.reduced())
-    qspec = QuantSpec(args.weight_bits)
     params = init_params(jax.random.PRNGKey(0), spec)
-    cfg = EngineConfig(
-        qspec,
+    # One declarative target covers what used to be EngineConfig + the
+    # compile_network/compile_engine hand-wiring: precision pair, backend
+    # (interpret auto-selects off-TPU), core count, stream geometry.
+    target = spidr.DeployTarget(
+        weight_bits=args.weight_bits,
         backend="jnp" if args.jnp else "fused",
-        # The k-innermost revisited-accumulator grid is only sequential on
-        # TPU hardware; everywhere else run the kernels interpreted.
-        interpret=not args.jnp and jax.default_backend() != "tpu",
-        block=(128, 128, 128),
+        n_cores=args.n_cores,
+        chunk_T=args.chunk_T,
+        stream_capacity=args.capacity,
     )
-    engine = build_engine(spec, params, cfg)
+    compiled = spidr.compile(spec, params, target)
 
-    schedule = None
-    if args.n_cores > 1:
-        # Multi-core plan: partition/place/schedule, then bake the channel
-        # slices into the engine.  Same outputs, per-core cost attribution;
-        # shard_map over a real device mesh when the host has the devices.
-        schedule = compile_network(spec, n_cores=args.n_cores, qspec=qspec)
-        engine = compile_engine(engine, schedule)
+    if compiled.schedule is not None:
         log.info("compiled %s onto %d cores (%d channel-split layers, "
                  "device_parallel=%s)\n%s", spec.name, args.n_cores,
-                 schedule.n_split_layers, engine.device_parallel,
-                 schedule.describe())
+                 compiled.schedule.n_split_layers,
+                 compiled.engine.device_parallel,
+                 compiled.schedule.describe())
 
     make = make_gesture_batch if args.snn == "gesture" else make_flow_batch
     ev, _ = make(jax.random.PRNGKey(1), batch=args.requests,
                  timesteps=spec.timesteps, hw=spec.input_hw)
 
     if args.streaming:
-        server = StreamingSNNServer(engine, capacity=args.capacity,
+        server = StreamingSNNServer(compiled, capacity=args.capacity,
                                     chunk_T=args.chunk_T)
         for r in range(args.requests):
             server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
@@ -346,7 +334,7 @@ def serve_snn(args):
             "latency p50 %.3fs; backend=%s",
             len(server.done), args.snn, spec.timesteps, args.chunk_T, dt,
             len(server.done) / dt, ticks, float(np.median(ttfr)),
-            float(np.median(lat)), engine.cfg.backend,
+            float(np.median(lat)), compiled.engine.cfg.backend,
         )
         cyc = [r.cycles for r in server.done]
         uj = [r.energy_uj for r in server.done]
@@ -356,7 +344,7 @@ def serve_snn(args):
         )
         return server
 
-    server = SNNServer(engine, capacity=args.capacity)
+    server = SNNServer(compiled, capacity=args.capacity)
     for r in range(args.requests):
         server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
 
@@ -365,32 +353,30 @@ def serve_snn(args):
         pass
     dt = time.monotonic() - t0
     lat = [r.done_at - r.submitted_at for r in server.done]
-    cost = estimate_cost(
-        spec, qspec, server.total_input_counts / max(len(server.done), 1)
-    )
+    mean_counts = server.total_input_counts / max(len(server.done), 1)
+    cost = compiled.cost(input_counts=mean_counts)
     log.info(
         "served %d %s streams (%d timesteps each) in %.2fs "
         "(%.1f streams/s, %d batches); latency p50 %.3fs; backend=%s",
         len(server.done), args.snn, spec.timesteps, dt,
         len(server.done) / dt, server.batches, float(np.median(lat)),
-        engine.cfg.backend,
+        compiled.engine.cfg.backend,
     )
-    log.info(
-        "chip estimate/stream: %.2f ms @%dMHz, %.1f uJ, sparsity %.1f%%, "
-        "async speedup %.2fx",
-        cost.latency_ms, 50, cost.energy_uj, 100 * cost.mean_sparsity,
-        cost.async_speedup,
-    )
-    if schedule is not None:
-        mc = estimate_multicore_cost(
-            spec, schedule,
-            server.total_input_counts / max(len(server.done), 1))
+    if compiled.schedule is None:
         log.info(
-            "multi-core attribution/stream: per-core busy %s cycles, "
-            "routing %s, load imbalance %.2fx, energy %.1f uJ "
+            "chip estimate/stream: %.2f ms @%dMHz, %.1f uJ, sparsity "
+            "%.1f%%, async speedup %.2fx",
+            cost.latency_ms, 50, cost.energy_uj, 100 * cost.mean_sparsity,
+            cost.async_speedup,
+        )
+    else:
+        log.info(
+            "multi-core attribution/stream: makespan %d cycles, per-core "
+            "busy %s, routing %s, load imbalance %.2fx, energy %.1f uJ "
             "(%.2f uJ routing)",
-            mc.busy_cycles.tolist(), mc.routing_cycles.tolist(),
-            mc.load_imbalance, mc.energy_uj, mc.routing_energy_uj,
+            cost.makespan_cycles, cost.busy_cycles.tolist(),
+            cost.routing_cycles.tolist(), cost.load_imbalance,
+            cost.energy_uj, cost.routing_energy_uj,
         )
     return server
 

@@ -84,10 +84,8 @@ def train_snn(args):
     """
     import os
 
-    from repro.engine import EngineConfig
-    from repro.snn.export import (
-        deploy, export_network, load_exported, save_exported, verify_roundtrip,
-    )
+    from repro import spidr
+    from repro.snn.export import export_network
     from repro.snn.train import (
         TrainConfig, effective_spec, fit, make_batch_fn, spec_for,
     )
@@ -105,32 +103,37 @@ def train_snn(args):
     ckpt = Checkpointer(args.ckpt_dir)
     state, history = fit(spec, tcfg, ckpt=ckpt)
 
-    # Fold into the integer engine format and persist both artifacts.
+    # Fold into the integer engine format and persist both artifacts: the
+    # facade's save/load ride on the snn.export checkpoint format.
     from repro.core.quant import QuantSpec
 
     run_spec = effective_spec(spec, tcfg)
     exported = export_network(state.params, run_spec, QuantSpec(args.weight_bits))
-    export_ckpt = Checkpointer(os.path.join(args.ckpt_dir, "exported"))
-    save_exported(export_ckpt, args.steps, exported)
-    reloaded = load_exported(export_ckpt, run_spec)
+    export_dir = os.path.join(args.ckpt_dir, "exported")
+    spidr.compile(
+        exported, run_spec,
+        spidr.DeployTarget(weight_bits=args.weight_bits),
+    ).save(export_dir, step=args.steps)
 
-    # Round-trip proof on a fresh stream, single- and multi-core.
+    # Round-trip proof on a fresh stream, single- and multi-core, through
+    # the reloaded artifact (what production would actually deploy).
     ev, _ = make_batch_fn(run_spec, tcfg, batch=2)(jax.random.PRNGKey(99))
     for n_cores in sorted({1, args.n_cores}):
-        engine = deploy(reloaded, run_spec,
-                        EngineConfig(QuantSpec(args.weight_bits), backend="jnp"),
-                        n_cores=n_cores)
-        rt = verify_roundtrip(state.params, run_spec, engine, ev, reloaded)
+        target = spidr.DeployTarget(weight_bits=args.weight_bits,
+                                    n_cores=n_cores)
+        compiled = spidr.load(export_dir, spec=run_spec, target=target)
+        report = compiled.verify(ev, params=state.params)
+        rt = report.roundtrip
         log.info("round-trip %d-core: exact=%s (readout_mismatch=%g, "
-                 "spike_mismatch=%d)", n_cores, rt.exact,
+                 "spike_mismatch=%d)", n_cores, report.exact,
                  rt.readout_mismatch, rt.spike_mismatch)
-        if not rt.exact:
+        if not report.exact:
             raise SystemExit(
-                f"train->deploy parity broken on {n_cores} core(s): {rt}")
+                f"train->deploy parity broken on {n_cores} core(s): {report}")
     log.info("done: loss %.4f -> %.4f, %s=%.4f; exported %d-bit integers "
              "to %s", history["loss"][0], history["loss"][-1],
              history["metric"], history["final"], args.weight_bits,
-             export_ckpt.directory)
+             export_dir)
     return history["loss"]
 
 

@@ -56,6 +56,7 @@ __all__ = [
     "dequantize_readout",
     "export_network",
     "load_exported",
+    "read_export_meta",
     "save_exported",
     "verify_roundtrip",
 ]
@@ -192,15 +193,39 @@ def _as_tree(exported: ExportedNetwork):
     ]
 
 
-def save_exported(ckpt: Checkpointer, step: int,
-                  exported: ExportedNetwork) -> None:
-    """Persist an exported network (atomic, one ``step_*`` directory)."""
-    ckpt.save(step, _as_tree(exported), extra_meta={
-        _EXPORT_META_KEY: {
-            "name": exported.name,
-            "weight_bits": exported.weight_bits,
-        },
-    })
+def read_export_meta(ckpt: Checkpointer, step: int) -> dict:
+    """The ``exported_snn`` metadata of one checkpoint step ({} if absent).
+
+    The single parser for the export artifact's metadata — the facade's
+    ``spidr.load`` and :func:`load_exported` both read through it, so the
+    key and layout cannot drift between them.
+    """
+    import json
+    import os
+
+    path = os.path.join(ckpt.directory, f"step_{step:09d}", "meta.json")
+    with open(path) as f:
+        meta = json.load(f)
+    return meta.get(_EXPORT_META_KEY) or {}
+
+
+def save_exported(ckpt: Checkpointer, step: int, exported: ExportedNetwork,
+                  spec: Optional[SNNSpec] = None) -> None:
+    """Persist an exported network (atomic, one ``step_*`` directory).
+
+    Pass the ``spec`` the network was trained/exported at to record its
+    event geometry (``input_hw``/``timesteps``) in the metadata —
+    ``spidr.load`` then rebuilds the deployment at that geometry instead
+    of the paper network's full-size default when no spec is given.
+    """
+    info = {
+        "name": exported.name,
+        "weight_bits": exported.weight_bits,
+    }
+    if spec is not None:
+        info["input_hw"] = list(spec.input_hw)
+        info["timesteps"] = int(spec.timesteps)
+    ckpt.save(step, _as_tree(exported), extra_meta={_EXPORT_META_KEY: info})
 
 
 def load_exported(ckpt: Checkpointer, spec: SNNSpec,
@@ -212,19 +237,13 @@ def load_exported(ckpt: Checkpointer, spec: SNNSpec,
     ``spec``'s layer structure; missing leaf files surface as
     ``FileNotFoundError`` from the checkpointer.
     """
-    import json
-    import os
-
     if step is None:
         step = ckpt.latest_step()
         if step is None:
             raise FileNotFoundError(
                 f"no checkpoint steps under {ckpt.directory}")
-    path = os.path.join(ckpt.directory, f"step_{step:09d}", "meta.json")
-    with open(path) as f:
-        meta = json.load(f)
-    info = meta.get(_EXPORT_META_KEY)
-    if info is None:
+    info = read_export_meta(ckpt, step)
+    if not info:
         raise ValueError(
             f"checkpoint step {step} in {ckpt.directory} carries no "
             f"'{_EXPORT_META_KEY}' metadata — not an exported network "

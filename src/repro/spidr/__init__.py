@@ -1,0 +1,44 @@
+"""Unified SpiDR deployment API: one ``DeployTarget`` -> ``CompiledSNN``.
+
+The public face of the reproduction.  Declare *where* a network deploys
+with :class:`DeployTarget` (weight/Vmem precision pair, core count,
+backend, chunking, stream capacity, compiler overrides), then compile:
+
+    from repro import spidr
+
+    target = spidr.DeployTarget(weight_bits=4, n_cores=4)
+    compiled = spidr.compile(spec, params, target)       # float params
+    compiled = spidr.compile(exported, spec, target)     # trained integers
+
+    out = compiled.run(events)            # whole (T, B, H, W, C) tensors
+    session = compiled.open_stream()      # persistent-Vmem streaming slots
+    cost = compiled.cost(out)             # calibrated cycles/energy
+    compiled.save(path)                   # integer artifact ->
+    compiled = spidr.load(path)           # ...rebuilt deployment
+    report = compiled.verify()            # round-trip parity proof
+
+Every path is bit-exact with the internal layers it fronts
+(``repro.engine``, ``repro.compiler``, ``repro.snn.export`` — documented
+internals; see ``docs/api.md`` for the lifecycle walkthrough).
+"""
+from .compiled import (
+    CompiledSNN,
+    SlotUpdate,
+    StreamSession,
+    VerifyReport,
+    compile,
+    load,
+)
+from .target import BACKENDS, PRECISION_PAIRS, DeployTarget
+
+__all__ = [
+    "BACKENDS",
+    "CompiledSNN",
+    "DeployTarget",
+    "PRECISION_PAIRS",
+    "SlotUpdate",
+    "StreamSession",
+    "VerifyReport",
+    "compile",
+    "load",
+]

@@ -1,0 +1,459 @@
+"""``spidr.compile(network, params, target) -> CompiledSNN``: the facade.
+
+One entry point from a network to a deployed SpiDR instance.  Internally it
+routes through the existing layers — ``engine`` (fused timestep loop),
+``compiler`` (multi-core partition/place/schedule), ``snn.export``
+(train->deploy integer folding) and ``engine.streaming`` (persistent-Vmem
+sessions) — which are documented internals; every launcher, benchmark,
+example and doc constructs deployments through this module instead.
+
+Two input forms, matching the two legacy build chains bit-for-bit:
+
+  * ``compile(spec, float_params, target)`` quantizes with per-tensor
+    scales (the legacy ``build_engine`` chain — untrained/ad-hoc params);
+  * ``compile(exported, spec, target)`` deploys a trained
+    :class:`~repro.snn.export.ExportedNetwork` (per-channel power-of-two
+    scales, the legacy ``snn.export.deploy`` chain) — bit-identical to the
+    QAT training graph.
+
+``target.n_cores > 1`` additionally routes through
+``compiler.compile_network`` + ``engine.compile_engine``; the compiled
+plan is bit-exact with single-core execution under any chunking, so every
+:class:`CompiledSNN` method behaves identically at any core count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import Checkpointer
+from ..compiler import compile_network
+from ..core.network import SNNSpec
+from ..core.quant import QuantSpec
+from ..engine.cost import estimate_cost, estimate_multicore_cost
+from ..engine.inference import (
+    EngineConfig,
+    EngineOutput,
+    SNNEngine,
+    build_engine,
+    compile_engine,
+    run_engine,
+    run_reference,
+)
+from ..engine.streaming import SlotUpdate, StreamSessionManager
+from ..snn.export import (
+    ExportedNetwork,
+    RoundTrip,
+    deploy,
+    save_exported,
+    load_exported,
+    verify_roundtrip,
+)
+from .target import DeployTarget, _require_positive_int
+
+__all__ = [
+    "CompiledSNN",
+    "SlotUpdate",
+    "StreamSession",
+    "VerifyReport",
+    "compile",
+    "load",
+]
+
+
+def _engine_config(target: DeployTarget) -> EngineConfig:
+    """Lower a :class:`DeployTarget` onto the engine's execution config."""
+    interpret = target.interpret
+    if interpret is None:
+        # The fused kernels' revisited-accumulator grid is only sequential
+        # on TPU hardware; everywhere else they run interpreted.
+        interpret = jax.default_backend() != "tpu"
+    return EngineConfig(
+        QuantSpec(target.weight_bits),
+        # "reference" executes the jnp datapath through the unjitted
+        # python-loop oracle (see CompiledSNN.run).
+        backend="fused" if target.backend == "fused" else "jnp",
+        interpret=bool(interpret),
+        skip_empty=target.skip_empty,
+        block=tuple(target.block),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyReport:
+    """Result of :meth:`CompiledSNN.verify`: the deployment's proof chain.
+
+    ``reference_exact``    engine output == the unjitted pure-jnp
+                           python-loop oracle on the same integers.
+    ``single_core_exact``  compiled multi-core plan == the single-core
+                           engine (None when the target is single-core).
+    ``roundtrip``          QAT training-graph parity
+                           (:class:`~repro.snn.export.RoundTrip`; None
+                           when no float params are available).
+    """
+
+    exact: bool
+    reference_exact: bool
+    single_core_exact: Optional[bool] = None
+    roundtrip: Optional[RoundTrip] = None
+
+    def __bool__(self) -> bool:  # pragma: no cover - convenience
+        return self.exact
+
+
+class StreamSession:
+    """Session handle over a bank of persistent-Vmem stream slots.
+
+    Wraps an ``engine.streaming.StreamSessionManager``: ``capacity`` slots
+    multiplexed into one fixed-shape jitted chunk step per tick.  The
+    delivery contract is the manager's (every open slot delivers a chunk
+    every tick; a short chunk ends its stream) — violations raise with the
+    manager's diagnostics instead of corrupting state.
+    """
+
+    def __init__(self, engine: SNNEngine, capacity: int, chunk_T: int):
+        self._manager = StreamSessionManager(engine, capacity=capacity,
+                                             chunk_T=chunk_T)
+
+    @property
+    def capacity(self) -> int:
+        return self._manager.capacity
+
+    @property
+    def chunk_T(self) -> int:
+        return self._manager.chunk_T
+
+    @property
+    def occupancy(self) -> int:
+        return self._manager.occupancy
+
+    def open(self) -> Optional[int]:
+        """Allocate a slot for a new stream; None if the session is full."""
+        return self._manager.open()
+
+    def step(self, chunks: dict) -> dict:
+        """Advance every open slot by one chunk: ``{slot: (t, H, W, C)}``
+        events in, ``{slot: SlotUpdate}`` incremental replies out."""
+        return self._manager.step(chunks)
+
+    def close(self, slot: int) -> None:
+        """Retire a stream and free its slot for reuse."""
+        self._manager.close(slot)
+
+    def __enter__(self) -> "StreamSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for slot, active in enumerate(self._manager.active):
+            if active:
+                self._manager.close(slot)
+
+
+class CompiledSNN:
+    """A deployed SpiDR network: engine + schedule behind one lifecycle.
+
+    Built by :func:`compile` / :func:`load`; owns the executable
+    :class:`~repro.engine.SNNEngine` (single- or multi-core) and exposes
+    the whole deployment lifecycle:
+
+      ``run(events)``      whole-tensor inference over ``(T, B, H, W, C)``
+      ``open_stream()``    persistent-Vmem streaming session
+      ``cost(result)``     calibrated chip cycles/energy for a run
+      ``save(path)``       persist the integer artifact (``spidr.load``
+                           rebuilds the deployment from it)
+      ``verify()``         round-trip parity proof
+
+    Everything is bit-exact with the internal layers it fronts: the same
+    spike trains, costs and checkpoints as hand-wiring ``build_engine`` /
+    ``compile_network`` / ``compile_engine`` / ``run_chunk`` /
+    ``StreamSessionManager`` / ``snn.export`` directly.
+    """
+
+    def __init__(self, spec: SNNSpec, target: DeployTarget,
+                 engine: SNNEngine, base_engine: SNNEngine,
+                 exported: Optional[ExportedNetwork] = None,
+                 params=None):
+        self.spec = spec
+        self.target = target
+        self.engine = engine
+        self.exported = exported
+        self.params = params
+        self._base_engine = base_engine  # single-core engine (oracle)
+        self._jit_run = None
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def schedule(self):
+        """The compiler's :class:`CoreSchedule` (None on single core)."""
+        return self.engine.schedule
+
+    @property
+    def n_cores(self) -> int:
+        return self.target.n_cores
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"CompiledSNN({self.spec.name!r}, "
+                f"{self.target.weight_bits}/{self.target.vmem_bits}-bit, "
+                f"{self.target.n_cores} core(s), "
+                f"backend={self.target.backend!r}, "
+                f"{'exported' if self.exported is not None else 'per-tensor'}"
+                " weights)")
+
+    # -- whole-tensor inference --------------------------------------------
+    def run(self, events) -> EngineOutput:
+        """Run a whole ``(T, B, H, W, C)`` binary event stream.
+
+        Returns the engine's :class:`~repro.engine.EngineOutput` (readout +
+        per-timestep spike statistics) — pass it to :meth:`cost` to price
+        the run on the calibrated chip models.
+        """
+        # Hot path: a facade dispatch must cost nothing next to the engine
+        # (benchmarks/run.py facade_overhead gates it at <1% wall time).
+        run_fn = self._jit_run
+        if run_fn is not None and isinstance(events, jax.Array) \
+                and events.ndim == 5:
+            return run_fn(events)
+        events = jnp.asarray(events)
+        if events.ndim != 5:
+            raise ValueError(
+                f"expected events of shape (T, B, H, W, C); got "
+                f"{events.shape} — a single stream needs a batch axis "
+                "(events[:, None])")
+        if self.target.backend == "reference":
+            return run_reference(self.engine, events)
+        if self._jit_run is None:
+            self._jit_run = jax.jit(functools.partial(run_engine, self.engine))
+        return self._jit_run(events)
+
+    # -- streaming ---------------------------------------------------------
+    def open_stream(self, capacity: Optional[int] = None,
+                    chunk_T: Optional[int] = None) -> StreamSession:
+        """Open a persistent-Vmem streaming session.
+
+        ``capacity`` / ``chunk_T`` default to the target's
+        ``stream_capacity`` / ``chunk_T``.  A stream served through the
+        session is bit-identical to a whole-stream :meth:`run` on that
+        stream alone, whatever shares the batch.  (A ``"reference"``
+        target streams through the jitted jnp datapath — same integers,
+        same spikes.)
+        """
+        capacity = self.target.stream_capacity if capacity is None \
+            else capacity
+        chunk_T = self.target.chunk_T if chunk_T is None else chunk_T
+        _require_positive_int("capacity", capacity,
+                              hint="concurrent persistent-Vmem stream slots")
+        _require_positive_int("chunk_T", chunk_T,
+                              hint="timesteps delivered per streaming tick")
+        return StreamSession(self.engine, capacity=capacity, chunk_T=chunk_T)
+
+    # -- chip cost ---------------------------------------------------------
+    def cost(self, result=None, input_counts=None):
+        """Price a run on the calibrated chip models.
+
+        Pass the :class:`~repro.engine.EngineOutput` from :meth:`run` (or
+        any object with per-timestep ``input_counts``), or a raw
+        ``(T, n_weight_layers)`` array via ``input_counts``.  Returns an
+        ``EngineCost`` (single core) or ``MulticoreCost`` (compiled plan,
+        with per-core attribution and routing overhead).
+        """
+        if input_counts is None:
+            if result is None or getattr(result, "input_counts", None) is None:
+                raise ValueError(
+                    "cost() needs spike statistics: pass the EngineOutput "
+                    "from run() (with collect_counts on), or a raw "
+                    "(T, n_weight_layers) array via input_counts=")
+            input_counts = result.input_counts
+        counts = np.asarray(input_counts)
+        if self.schedule is not None:
+            return estimate_multicore_cost(self.spec, self.schedule, counts)
+        return estimate_cost(self.spec, self.target.qspec, counts)
+
+    # -- persistence -------------------------------------------------------
+    def save(self, path, step: int = 0) -> None:
+        """Persist the deployment's integer artifact under ``path``.
+
+        Writes the standard ``snn.export`` checkpoint (atomic, validated
+        on reload); ``spidr.load(path)`` rebuilds an equivalent
+        :class:`CompiledSNN` from it, bit-exactly, at any target.
+        """
+        if self.exported is None:
+            raise ValueError(
+                "this CompiledSNN was compiled from float params with "
+                "per-tensor scales, which the export checkpoint format "
+                "does not represent — train/export first (snn.train.fit, "
+                "then compile(exported, spec, target)) or deploy an "
+                "ExportedNetwork to make save()/load() available")
+        save_exported(Checkpointer(str(path)), step, self.exported,
+                      spec=self.spec)
+
+    # -- the proof ---------------------------------------------------------
+    def verify(self, events=None, params=None, batch: int = 2,
+               seed: int = 0) -> VerifyReport:
+        """Prove the deployment's round-trip parity on ``events``.
+
+        Checks, all bit-exact (equal, not close): the engine against the
+        unjitted pure-jnp python-loop oracle; a compiled multi-core plan
+        against the single-core engine; and — when float params are
+        available (``params`` here, or retained from :func:`compile`) —
+        the deployed integers against the QAT training graph
+        (``snn.export.verify_roundtrip``).  ``events`` defaults to a
+        synthetic DVS batch matching the spec's head.
+        """
+        if events is None:
+            from ..snn.data import make_flow_batch, make_gesture_batch
+
+            make = (make_gesture_batch if self.spec.readout == "rate"
+                    else make_flow_batch)
+            events, _ = make(jax.random.PRNGKey(seed), batch=batch,
+                             timesteps=self.spec.timesteps,
+                             hw=self.spec.input_hw)
+        events = jnp.asarray(events)
+        out = self.run(events)
+        ref = run_reference(self._base_engine, events)
+        reference_exact = bool(
+            (np.asarray(out.readout) == np.asarray(ref.readout)).all()
+            and (np.asarray(out.spike_counts)
+                 == np.asarray(ref.spike_counts)).all())
+        single_core_exact = None
+        if self.schedule is not None:
+            single = run_engine(self._base_engine, events)
+            single_core_exact = bool(
+                (np.asarray(out.readout) == np.asarray(single.readout)).all()
+                and (np.asarray(out.spike_counts)
+                     == np.asarray(single.spike_counts)).all())
+        roundtrip = None
+        params = params if params is not None else self.params
+        if self.exported is not None and params is not None:
+            roundtrip = verify_roundtrip(params, self.spec, self.engine,
+                                         events, self.exported,
+                                         engine_out=out)
+        exact = reference_exact \
+            and single_core_exact is not False \
+            and (roundtrip is None or roundtrip.exact)
+        return VerifyReport(exact=exact, reference_exact=reference_exact,
+                            single_core_exact=single_core_exact,
+                            roundtrip=roundtrip)
+
+
+def compile(network, params=None, target: Optional[DeployTarget] = None,
+            *, spec: Optional[SNNSpec] = None) -> CompiledSNN:
+    """Deploy a network onto a :class:`DeployTarget`.
+
+    Two forms, one per quantization provenance:
+
+      ``compile(spec, float_params, target)``
+          quantize ``float_params`` into the integer engine with
+          per-tensor scales (untrained / ad-hoc parameters — the legacy
+          ``build_engine`` chain, bit-for-bit);
+
+      ``compile(exported, spec, target)``
+          deploy a trained :class:`~repro.snn.export.ExportedNetwork`
+          (per-channel power-of-two scales — the legacy
+          ``snn.export.deploy`` chain, bit-for-bit).  Optionally keep the
+          trainer's float params for :meth:`CompiledSNN.verify` by passing
+          ``compile(exported, float_params, target, spec=spec)``.
+
+    ``target`` defaults to ``DeployTarget()`` (4/7-bit, single core, jnp
+    backend).  ``target.n_cores > 1`` compiles the network across a core
+    grid — bit-exact with single-core execution.
+    """
+    target = target or DeployTarget()
+    cfg = _engine_config(target)
+    if isinstance(network, ExportedNetwork):
+        if spec is None and isinstance(params, SNNSpec):
+            spec, params = params, None
+        if spec is None:
+            raise ValueError(
+                "deploying an ExportedNetwork needs its SNNSpec: "
+                "compile(exported, spec, target) or "
+                "compile(exported, float_params, target, spec=spec)")
+        if target.weight_bits != network.weight_bits:
+            raise ValueError(
+                f"target executes {target.weight_bits}-bit weights but the "
+                f"network was exported at {network.weight_bits}-bit — "
+                f"re-export, or deploy with DeployTarget(weight_bits="
+                f"{network.weight_bits})")
+        base = deploy(network, spec, cfg, n_cores=1)
+        exported = network
+    elif isinstance(network, SNNSpec):
+        spec = network
+        if params is None:
+            raise ValueError(
+                "compiling an SNNSpec needs its float params: "
+                "compile(spec, params, target) — params from "
+                "core.network.init_params or a snn.train fit; a trained "
+                "integer artifact deploys via compile(exported, spec, "
+                "target) instead")
+        base = build_engine(spec, params, cfg)
+        exported = None
+    else:
+        raise TypeError(
+            f"compile() takes an SNNSpec or an ExportedNetwork, got "
+            f"{type(network).__name__} — build a spec with "
+            "core.network.gesture_net/optical_flow_net (or a config's "
+            "reduced()), or an exported network with snn.train + "
+            "snn.export")
+    engine = base
+    if target.n_cores > 1:
+        schedule = compile_network(
+            spec, n_cores=target.n_cores, qspec=cfg.qspec,
+            assumed_sparsity=target.assumed_sparsity,
+            force_mode=target.force_mode,
+            force_stationarity=target.stationarity)
+        engine = compile_engine(base, schedule,
+                                device_parallel=target.device_parallel)
+    return CompiledSNN(spec=spec, target=target, engine=engine,
+                       base_engine=base, exported=exported, params=params)
+
+
+def load(path, spec: Optional[SNNSpec] = None,
+         target: Optional[DeployTarget] = None,
+         step: Optional[int] = None) -> CompiledSNN:
+    """Rebuild a deployment from a :meth:`CompiledSNN.save` checkpoint.
+
+    Reads the standard ``snn.export`` artifact under ``path`` (any
+    checkpoint written by ``save_exported`` loads too), validates it, and
+    deploys it onto ``target``.  ``spec`` defaults to the paper network
+    named in the checkpoint's metadata, restored to the event geometry
+    (``input_hw``/``timesteps``) the artifact was saved at —
+    ``CompiledSNN.save`` records it, so a save→load round trip rebuilds
+    the deployment exactly.  Pass the spec explicitly for artifacts
+    written by a bare legacy ``save_exported`` call at reduced geometry
+    (without it, the paper network's full-size geometry is assumed).
+    ``target`` defaults to the checkpoint's exported precision on one
+    core.
+    """
+    ckpt = Checkpointer(str(path))
+    if step is None:
+        step = ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no checkpoint steps under {ckpt.directory} — was the "
+                "deployment saved with CompiledSNN.save (or "
+                "snn.export.save_exported)?")
+    if spec is None:
+        from ..snn.export import read_export_meta
+        from ..snn.train import spec_for
+
+        info = read_export_meta(ckpt, step)
+        name = info.get("name")
+        try:
+            spec = spec_for(name)
+        except (ValueError, TypeError):
+            raise ValueError(
+                f"checkpoint step {step} names network {name!r}, which is "
+                "not one of the paper's specs — pass the SNNSpec it was "
+                "trained with: load(path, spec=...)") from None
+        if "input_hw" in info:
+            spec = dataclasses.replace(
+                spec, input_hw=tuple(info["input_hw"]),
+                timesteps=int(info.get("timesteps", spec.timesteps)))
+    exported = load_exported(ckpt, spec, step)
+    if target is None:
+        target = DeployTarget(weight_bits=exported.weight_bits)
+    return compile(exported, spec, target)

@@ -1,0 +1,72 @@
+"""Public-surface contract: ``repro``/``repro.spidr`` export exactly this.
+
+The facade is the API; these tests pin it.  An accidental addition to (or
+removal from) ``__all__`` fails here — growing the public surface is a
+deliberate act that updates EXPECTED in the same commit.
+"""
+import importlib
+
+import pytest
+
+import repro
+from repro import spidr
+
+EXPECTED_REPRO = {
+    # The deployment facade.
+    "spidr",
+    "CompiledSNN",
+    "DeployTarget",
+    "StreamSession",
+    "VerifyReport",
+    # Network construction.
+    "SNNSpec",
+    "gesture_net",
+    "optical_flow_net",
+    "init_params",
+    # Precision configuration.
+    "QuantSpec",
+    "SUPPORTED_PRECISIONS",
+    # Trained integer artifact.
+    "ExportedNetwork",
+}
+
+EXPECTED_SPIDR = {
+    "BACKENDS",
+    "CompiledSNN",
+    "DeployTarget",
+    "PRECISION_PAIRS",
+    "SlotUpdate",
+    "StreamSession",
+    "VerifyReport",
+    "compile",
+    "load",
+}
+
+
+class TestPublicSurface:
+    def test_repro_all_is_exactly_the_contract(self):
+        assert set(repro.__all__) == EXPECTED_REPRO, (
+            "repro.__all__ drifted from the public-surface contract — "
+            "additions/removals must update tests/test_public_api.py "
+            "deliberately")
+
+    def test_spidr_all_is_exactly_the_contract(self):
+        assert set(spidr.__all__) == EXPECTED_SPIDR
+
+    @pytest.mark.parametrize("module,name", sorted(
+        [("repro", n) for n in EXPECTED_REPRO]
+        + [("repro.spidr", n) for n in EXPECTED_SPIDR]))
+    def test_every_exported_symbol_imports(self, module, name):
+        mod = importlib.import_module(module)
+        assert getattr(mod, name) is not None
+
+    def test_no_duplicate_exports(self):
+        assert len(repro.__all__) == len(set(repro.__all__))
+        assert len(spidr.__all__) == len(set(spidr.__all__))
+
+    def test_facade_symbols_are_the_same_objects(self):
+        """Top-level re-exports alias the spidr package's objects."""
+        assert repro.CompiledSNN is spidr.CompiledSNN
+        assert repro.DeployTarget is spidr.DeployTarget
+        assert repro.StreamSession is spidr.StreamSession
+        assert repro.VerifyReport is spidr.VerifyReport

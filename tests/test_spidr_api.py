@@ -1,0 +1,407 @@
+"""The unified deployment facade: validation, parity with the legacy
+call chains, and the save/load round trip.
+
+The contract under test (ISSUE 5): ``spidr.compile``/``spidr.load`` are
+the only way consumers construct deployments, and everything they produce
+is bit-identical to hand-wiring the internals — ``build_engine`` /
+``snn.export.deploy`` -> ``compile_network`` -> ``compile_engine`` ->
+``init_state``/``run_chunk`` / ``StreamSessionManager`` — at every
+supported precision pair, on 1 and 4 cores, for both paper networks.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro import spidr
+from repro.configs import spidr_gesture, spidr_optflow
+from repro.core.network import init_params
+from repro.core.quant import QuantSpec
+from repro.engine import (
+    EngineConfig,
+    StreamSessionManager,
+    build_engine,
+    compile_engine,
+    estimate_cost,
+    estimate_multicore_cost,
+    init_state,
+    run_chunk,
+)
+from repro.compiler import compile_network
+from repro.snn.export import (
+    deploy,
+    export_network,
+    load_exported,
+    save_exported,
+)
+
+BITS = (4, 6, 8)
+CORES = (1, 4)
+
+
+def _spec(task):
+    if task == "gesture":
+        return spidr_gesture.reduced(hw=(16, 16), timesteps=4)
+    return spidr_optflow.reduced(hw=(8, 8), timesteps=4)
+
+
+def _events(spec, batch=2, seed=0, sparsity=0.9):
+    rng = np.random.default_rng(seed)
+    return (rng.random((spec.timesteps, batch) + spec.input_hw + (2,))
+            > sparsity).astype(np.float32)
+
+
+def _legacy_engine(spec, params, bits, n_cores):
+    """The pre-facade build chain, hand-wired."""
+    qspec = QuantSpec(bits)
+    engine = build_engine(spec, params, EngineConfig(qspec, backend="jnp"))
+    if n_cores > 1:
+        schedule = compile_network(spec, n_cores=n_cores, qspec=qspec)
+        engine = compile_engine(engine, schedule)
+    return engine
+
+
+def _legacy_run_chunked(engine, events, chunk=2):
+    """init_state + run_chunk over ``chunk``-sized pieces (legacy path)."""
+    state = init_state(engine, events.shape[1])
+    outs, counts = None, []
+    for lo in range(0, events.shape[0], chunk):
+        state, outs = run_chunk(engine, state, events[lo:lo + chunk])
+        counts.append(np.asarray(outs.input_counts))
+    return np.asarray(outs.readout), np.concatenate(counts, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DeployTarget validation: actionable messages, never bare asserts.
+# ---------------------------------------------------------------------------
+class TestDeployTargetValidation:
+    def test_defaults_derive_vmem_bits(self):
+        t = spidr.DeployTarget()
+        assert (t.weight_bits, t.vmem_bits) == (4, 7)
+        assert t.qspec == QuantSpec(4)
+        for bits, vmem in spidr.PRECISION_PAIRS:
+            assert spidr.DeployTarget(weight_bits=bits).vmem_bits == vmem
+
+    def test_unsupported_pair_names_nearest(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(weight_bits=5, vmem_bits=9)
+        assert "(5, 9) unsupported" in str(e.value)
+        assert "nearest supported: (4, 7), (6, 11)" in str(e.value)
+
+    def test_unsupported_weight_bits_names_nearest(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(weight_bits=3)
+        assert "(3, 5) unsupported" in str(e.value)
+        assert "(4, 7)" in str(e.value)
+
+    def test_mismatched_vmem_bits_names_the_invariant_pair(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(weight_bits=4, vmem_bits=8)
+        assert "(4, 8) unsupported" in str(e.value)
+        assert "(4, 7)" in str(e.value)
+
+    def test_unknown_backend_lists_supported(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(backend="pallas")
+        assert "'pallas' unsupported" in str(e.value)
+        assert "fused, jnp, reference" in str(e.value)
+
+    @pytest.mark.parametrize("field", ["n_cores", "chunk_T",
+                                       "stream_capacity"])
+    def test_counts_need_positive_integers(self, field):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(**{field: 0})
+        assert f"{field}=0 unsupported" in str(e.value)
+        assert "integer >= 1" in str(e.value)
+
+    def test_force_mode_names_the_modes(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(force_mode=3)
+        assert "force_mode=3 unsupported" in str(e.value)
+        assert "modes 1" in str(e.value) and "2" in str(e.value)
+
+    def test_stationarity_names_the_choices(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(stationarity="input")
+        assert "'input' unsupported" in str(e.value)
+        assert "'weight'" in str(e.value) and "'vmem'" in str(e.value)
+
+    def test_assumed_sparsity_range(self):
+        with pytest.raises(ValueError) as e:
+            spidr.DeployTarget(assumed_sparsity=1.5)
+        assert "assumed_sparsity=1.5 unsupported" in str(e.value)
+        assert "0.0 <= s < 1.0" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# compile()/run()/cost() input validation.
+# ---------------------------------------------------------------------------
+class TestCompileValidation:
+    def test_spec_without_params(self):
+        with pytest.raises(ValueError, match="needs its float params"):
+            spidr.compile(_spec("gesture"))
+
+    def test_exported_without_spec(self):
+        spec = _spec("gesture")
+        exported = export_network(
+            init_params(jax.random.PRNGKey(0), spec), spec, QuantSpec(4))
+        with pytest.raises(ValueError, match="needs its SNNSpec"):
+            spidr.compile(exported)
+
+    def test_exported_precision_mismatch(self):
+        spec = _spec("gesture")
+        exported = export_network(
+            init_params(jax.random.PRNGKey(0), spec), spec, QuantSpec(6))
+        with pytest.raises(ValueError, match="exported at 6-bit"):
+            spidr.compile(exported, spec, spidr.DeployTarget(weight_bits=4))
+
+    def test_garbage_network_type(self):
+        with pytest.raises(TypeError, match="SNNSpec or an ExportedNetwork"):
+            spidr.compile(object())
+
+    def test_run_requires_batch_axis(self):
+        spec = _spec("gesture")
+        c = spidr.compile(spec, init_params(jax.random.PRNGKey(0), spec))
+        with pytest.raises(ValueError, match=r"events\[:, None\]"):
+            c.run(_events(spec)[:, 0])
+
+    def test_cost_without_counts(self):
+        spec = _spec("gesture")
+        c = spidr.compile(spec, init_params(jax.random.PRNGKey(0), spec))
+        with pytest.raises(ValueError, match="spike statistics"):
+            c.cost()
+
+    def test_save_needs_exported_weights(self, tmp_path):
+        spec = _spec("gesture")
+        c = spidr.compile(spec, init_params(jax.random.PRNGKey(0), spec))
+        with pytest.raises(ValueError, match="per-tensor scales"):
+            c.save(tmp_path / "ckpt")
+
+
+# ---------------------------------------------------------------------------
+# The parity matrix: facade == legacy chains, gesture + flow, all three
+# precision pairs, 1 and 4 cores, whole-tensor AND streaming.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("task", ["gesture", "flow"])
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("n_cores", CORES)
+class TestFacadeLegacyParity:
+    def test_run_and_stream_bit_match_legacy(self, task, bits, n_cores):
+        spec = _spec(task)
+        params = init_params(jax.random.PRNGKey(0), spec)
+        ev = _events(spec, batch=2)
+
+        legacy = _legacy_engine(spec, params, bits, n_cores)
+        want_readout, want_counts = _legacy_run_chunked(legacy, ev)
+
+        compiled = spidr.compile(
+            spec, params,
+            spidr.DeployTarget(weight_bits=bits, n_cores=n_cores,
+                               backend="jnp"))
+        out = compiled.run(ev)
+        np.testing.assert_array_equal(np.asarray(out.readout), want_readout)
+        np.testing.assert_array_equal(np.asarray(out.input_counts),
+                                      want_counts)
+
+        # Streaming: the facade session vs the raw manager, same two
+        # streams delivered in the same chunks, slot for slot.
+        mgr = StreamSessionManager(legacy, capacity=2, chunk_T=2)
+        session = compiled.open_stream(capacity=2, chunk_T=2)
+        slots_legacy = [mgr.open(), mgr.open()]
+        slots_facade = [session.open(), session.open()]
+        assert slots_legacy == slots_facade
+        for lo in range(0, spec.timesteps, 2):
+            chunks = {s: ev[lo:lo + 2, i]
+                      for i, s in enumerate(slots_legacy)}
+            want = mgr.step(chunks)
+            got = session.step({s: ev[lo:lo + 2, i]
+                                for i, s in enumerate(slots_facade)})
+            for s in slots_legacy:
+                np.testing.assert_array_equal(got[s].readout,
+                                              want[s].readout)
+                assert got[s].cycles == want[s].cycles
+                assert got[s].energy_uj == want[s].energy_uj
+                assert got[s].chunk_spikes == want[s].chunk_spikes
+        # And the streamed readout equals the whole-tensor facade run.
+        np.testing.assert_array_equal(got[slots_facade[0]].readout,
+                                      np.asarray(out.readout)[0])
+
+
+@pytest.mark.parametrize("bits", BITS)
+class TestExportedParity:
+    """compile(exported, ...) == legacy snn.export.deploy, and save/load
+    round-trips through the existing export checkpoint format."""
+
+    def test_exported_run_matches_legacy_deploy(self, bits):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(1), spec)
+        exported = export_network(params, spec, QuantSpec(bits))
+        ev = _events(spec, batch=2, seed=1)
+        for n_cores in CORES:
+            legacy = deploy(exported, spec, n_cores=n_cores)
+            want_readout, want_counts = _legacy_run_chunked(legacy, ev)
+            compiled = spidr.compile(
+                exported, spec,
+                spidr.DeployTarget(weight_bits=bits, n_cores=n_cores))
+            out = compiled.run(ev)
+            np.testing.assert_array_equal(np.asarray(out.readout),
+                                          want_readout)
+            np.testing.assert_array_equal(np.asarray(out.input_counts),
+                                          want_counts)
+
+    def test_save_load_roundtrip(self, bits, tmp_path):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(1), spec)
+        exported = export_network(params, spec, QuantSpec(bits))
+        ev = _events(spec, batch=2, seed=1)
+
+        compiled = spidr.compile(exported, spec,
+                                 spidr.DeployTarget(weight_bits=bits))
+        compiled.save(tmp_path / "ckpt", step=7)
+
+        # The artifact is the standard snn.export checkpoint: the legacy
+        # loader reads what the facade saved...
+        from repro.checkpoint.checkpoint import Checkpointer
+
+        legacy_loaded = load_exported(Checkpointer(str(tmp_path / "ckpt")),
+                                      spec, step=7)
+        assert legacy_loaded.weight_bits == bits
+        for ex, lx in zip(exported.layers, legacy_loaded.layers):
+            if ex is None:
+                assert lx is None
+                continue
+            np.testing.assert_array_equal(ex.w_q, lx.w_q)
+            np.testing.assert_array_equal(ex.thr_int, lx.thr_int)
+
+        # ...and the facade loads what the legacy saver wrote.
+        save_exported(Checkpointer(str(tmp_path / "legacy")), 3, exported)
+        reloaded = spidr.load(tmp_path / "legacy", spec=spec)
+        assert reloaded.target.weight_bits == bits
+        out = compiled.run(ev)
+        out2 = reloaded.run(ev)
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(out2.readout))
+
+    def test_load_without_spec_restores_saved_geometry(self, bits, tmp_path):
+        """save() records input_hw/timesteps, so load() without a spec
+        rebuilds the reduced-geometry deployment instead of defaulting to
+        the paper network's full-size frames (which would crash run())."""
+        spec = _spec("gesture")   # reduced: (16, 16) x 4 timesteps
+        params = init_params(jax.random.PRNGKey(1), spec)
+        exported = export_network(params, spec, QuantSpec(bits))
+        saved = spidr.compile(exported, spec,
+                              spidr.DeployTarget(weight_bits=bits))
+        saved.save(tmp_path / "ckpt")
+
+        reloaded = spidr.load(tmp_path / "ckpt")
+        assert reloaded.spec.input_hw == spec.input_hw
+        assert reloaded.spec.timesteps == spec.timesteps
+        ev = _events(spec, batch=2, seed=1)
+        np.testing.assert_array_equal(np.asarray(saved.run(ev).readout),
+                                      np.asarray(reloaded.run(ev).readout))
+
+    def test_load_onto_multicore_target(self, bits, tmp_path):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(1), spec)
+        exported = export_network(params, spec, QuantSpec(bits))
+        spidr.compile(exported, spec,
+                      spidr.DeployTarget(weight_bits=bits)).save(
+            tmp_path / "ckpt")
+        ev = _events(spec, batch=2, seed=1)
+        c1 = spidr.load(tmp_path / "ckpt", spec=spec)
+        c4 = spidr.load(tmp_path / "ckpt", spec=spec,
+                        target=spidr.DeployTarget(weight_bits=bits,
+                                                  n_cores=4))
+        assert c4.schedule is not None and c4.schedule.n_cores == 4
+        np.testing.assert_array_equal(np.asarray(c1.run(ev).readout),
+                                      np.asarray(c4.run(ev).readout))
+
+
+class TestLifecycle:
+    def test_cost_matches_internal_models(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        ev = _events(spec)
+        c1 = spidr.compile(spec, params, spidr.DeployTarget(backend="jnp"))
+        out = c1.run(ev)
+        counts = np.asarray(out.input_counts)
+        got = c1.cost(out)
+        want = estimate_cost(spec, QuantSpec(4), counts)
+        assert got.makespan_cycles == want.makespan_cycles
+        assert got.energy_uj == want.energy_uj
+
+        c4 = spidr.compile(spec, params,
+                           spidr.DeployTarget(backend="jnp", n_cores=4))
+        got4 = c4.cost(input_counts=counts)
+        want4 = estimate_multicore_cost(spec, c4.schedule, counts)
+        assert got4.makespan_cycles == want4.makespan_cycles
+        np.testing.assert_array_equal(got4.busy_cycles, want4.busy_cycles)
+
+    def test_reference_backend_matches_jnp(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        ev = _events(spec)
+        jnp_out = spidr.compile(spec, params,
+                                spidr.DeployTarget(backend="jnp")).run(ev)
+        ref_out = spidr.compile(
+            spec, params, spidr.DeployTarget(backend="reference")).run(ev)
+        np.testing.assert_array_equal(np.asarray(jnp_out.readout),
+                                      np.asarray(ref_out.readout))
+        np.testing.assert_array_equal(np.asarray(jnp_out.spike_counts),
+                                      np.asarray(ref_out.spike_counts))
+
+    def test_verify_proves_the_roundtrip(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        exported = export_network(params, spec, QuantSpec(4))
+        c = spidr.compile(exported, params,
+                          spidr.DeployTarget(weight_bits=4, n_cores=4),
+                          spec=spec)
+        report = c.verify(_events(spec))
+        assert report.exact
+        assert report.reference_exact
+        assert report.single_core_exact is True
+        assert report.roundtrip is not None and report.roundtrip.exact
+
+    def test_verify_without_params_skips_roundtrip(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        exported = export_network(params, spec, QuantSpec(4))
+        c = spidr.compile(exported, spec, spidr.DeployTarget(weight_bits=4))
+        report = c.verify(_events(spec))
+        assert report.exact and report.roundtrip is None
+        assert report.single_core_exact is None
+
+    def test_compiler_overrides_pin_the_plan_and_stay_exact(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        ev = _events(spec)
+        base = spidr.compile(spec, params,
+                             spidr.DeployTarget(backend="jnp", n_cores=4))
+        pinned = spidr.compile(
+            spec, params,
+            spidr.DeployTarget(backend="jnp", n_cores=4, force_mode=2,
+                               stationarity="vmem", assumed_sparsity=0.6))
+        for ls in pinned.schedule.layers:
+            assert ls.plan.mode == 2
+            assert ls.plan.stationarity == "vmem"
+        # Overrides only move the modeled cost, never the computed spikes.
+        np.testing.assert_array_equal(np.asarray(base.run(ev).readout),
+                                      np.asarray(pinned.run(ev).readout))
+
+    def test_open_stream_validates_overrides(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        c = spidr.compile(spec, params, spidr.DeployTarget(backend="jnp"))
+        with pytest.raises(ValueError, match="capacity=0 unsupported"):
+            c.open_stream(capacity=0)
+        with pytest.raises(ValueError, match="chunk_T=-1 unsupported"):
+            c.open_stream(chunk_T=-1)
+
+    def test_stream_session_context_manager_closes_slots(self):
+        spec = _spec("gesture")
+        params = init_params(jax.random.PRNGKey(0), spec)
+        c = spidr.compile(spec, params, spidr.DeployTarget(backend="jnp"))
+        with c.open_stream(capacity=2, chunk_T=2) as session:
+            assert session.open() == 0
+            assert session.occupancy == 1
+        assert session.occupancy == 0

@@ -338,16 +338,21 @@ class TestPipelineResume:
 
 class TestStreamingServer:
     def test_serves_more_streams_than_capacity_bit_exact(self):
+        from repro import spidr
         from repro.launch.serve import SNNRequest, StreamingSNNServer
 
         spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
         params = init_params(jax.random.PRNGKey(0), spec)
+        # The server consumes the deployment facade; the whole-stream
+        # reference stays on the hand-built legacy engine (same integers).
         eng = build_engine(spec, params,
                            EngineConfig(QuantSpec(4), backend="jnp"))
+        compiled = spidr.compile(spec, params,
+                                 spidr.DeployTarget(backend="jnp"))
         ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=5,
                                    timesteps=6, hw=(16, 16))
         whole = run_engine(eng, ev)
-        server = StreamingSNNServer(eng, capacity=2, chunk_T=2)
+        server = StreamingSNNServer(compiled, capacity=2, chunk_T=2)
         for r in range(5):
             server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
         ticks = 0
