@@ -1,13 +1,18 @@
-"""Sharded checkpointing: atomic, async, elastic.
+"""Sharded checkpointing: atomic, async, elastic, checksummed.
 
 Layout: <dir>/step_<n>/
-  meta.json            step, arch, leaf manifest
+  meta.json            step, arch, leaf manifest (dtype/shape/crc32), version
   <leaf_idx>.npy       one file per pytree leaf
 
 Guarantees:
   * ATOMIC — written to ``.tmp-...`` then os.rename'd; a crash mid-save
     never corrupts the latest checkpoint; ``latest_step`` only sees
     completed saves.
+  * VALIDATED — every leaf's crc32 is recorded in the manifest and checked
+    on restore, and the manifest carries a format version; a truncated or
+    bit-flipped leaf, or a checkpoint written by a newer format, raises
+    :class:`CheckpointError` (a ``ValueError``) naming the damage instead
+    of silently deploying corrupted state.
   * ASYNC — ``save_async`` snapshots to host memory synchronously (cheap)
     and writes in a background thread; ``wait()`` joins before the next
     save (single outstanding write, bounded memory).
@@ -18,7 +23,10 @@ Guarantees:
 Fault-tolerance contract with runtime.fault_tolerance: the training loop
 checkpoints every N steps; on failure the watchdog restarts from
 ``latest_step`` and the data pipeline replays deterministically from that
-step (data/pipeline.py is a pure function of step).
+step (data/pipeline.py is a pure function of step).  The streaming tier
+(``spidr`` session snapshots, ``launch/serve.py``) rides on the same
+guarantees: a serving process SIGKILLed mid-save leaves only the previous
+completed snapshot visible.
 """
 from __future__ import annotations
 
@@ -26,14 +34,24 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer"]
+__all__ = ["CheckpointError", "Checkpointer", "FORMAT_VERSION"]
 
 Pytree = Any
+
+# Bump when the on-disk layout changes incompatibly.  restore() refuses
+# checkpoints stamped with a newer version (clean error, no guessing);
+# version-0 checkpoints (pre-checksum) load without validation.
+FORMAT_VERSION = 1
+
+
+class CheckpointError(ValueError):
+    """A checkpoint failed validation (corrupt, truncated, or wrong version)."""
 
 
 class Checkpointer:
@@ -75,9 +93,17 @@ class Checkpointer:
             if leaf is None:
                 manifest.append(None)
             else:
+                # NOT ascontiguousarray: that promotes 0-d scalars to (1,),
+                # breaking shape round-trips for scalar leaves.
+                leaf = np.asarray(leaf, order="C")
                 np.save(os.path.join(tmp, f"{i}.npy"), leaf)
-                manifest.append({"dtype": str(leaf.dtype), "shape": list(leaf.shape)})
-        meta = {"step": step, "n_leaves": len(host_leaves), "manifest": manifest,
+                manifest.append({
+                    "dtype": str(leaf.dtype),
+                    "shape": list(leaf.shape),
+                    "crc32": zlib.crc32(leaf.tobytes()),
+                })
+        meta = {"step": step, "format_version": FORMAT_VERSION,
+                "n_leaves": len(host_leaves), "manifest": manifest,
                 "treedef": treedef_str, **extra_meta}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
@@ -99,12 +125,36 @@ class Checkpointer:
         step: int,
         like: Pytree,
         shardings: Optional[Pytree] = None,
+        host: bool = False,
     ) -> Pytree:
         """Restore into the structure of ``like``; device_put with
-        ``shardings`` if given (elastic re-shard happens here)."""
+        ``shardings`` if given (elastic re-shard happens here).
+
+        Every leaf is validated against the manifest (crc32 + dtype/shape)
+        before it is returned; damage raises :class:`CheckpointError`.
+
+        ``host=True`` returns the leaves as numpy arrays with their exact
+        on-disk dtypes instead of device arrays — required for trees that
+        carry int64/float64 accounting (e.g. spidr session snapshots),
+        which ``jnp.asarray`` would silently truncate under 32-bit jax.
+        """
         path = os.path.join(self.directory, f"step_{step:09d}")
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointError(
+                f"checkpoint step {step} in {self.directory} has an "
+                f"unreadable meta.json: {e}") from e
+        version = meta.get("format_version", 0)
+        if version > FORMAT_VERSION:
+            raise CheckpointError(
+                f"checkpoint step {step} was written by format version "
+                f"{version}, but this build reads <= {FORMAT_VERSION} — "
+                "upgrade the code or re-save the checkpoint")
+        manifest = meta.get("manifest") or [None] * meta["n_leaves"]
         leaves_like, treedef = jax.tree.flatten(like, is_leaf=lambda x: x is None)
         assert meta["n_leaves"] == len(leaves_like), "pytree structure changed"
         out = []
@@ -116,6 +166,34 @@ class Checkpointer:
             if ll is None:
                 out.append(None)
                 continue
-            arr = np.load(os.path.join(path, f"{i}.npy"))
-            out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+            leaf_path = os.path.join(path, f"{i}.npy")
+            try:
+                arr = np.load(leaf_path)
+            except FileNotFoundError:
+                raise
+            except Exception as e:
+                raise CheckpointError(
+                    f"checkpoint step {step} leaf {i} is unreadable "
+                    f"(truncated or corrupt {leaf_path}): {e}") from e
+            entry = manifest[i] if i < len(manifest) else None
+            if entry is not None and "crc32" in entry:
+                if (str(arr.dtype) != entry["dtype"]
+                        or list(arr.shape) != entry["shape"]):
+                    raise CheckpointError(
+                        f"checkpoint step {step} leaf {i} is "
+                        f"{arr.dtype}{arr.shape}, but the manifest records "
+                        f"{entry['dtype']}{tuple(entry['shape'])} — the "
+                        "leaf file was modified after the save")
+                crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                if crc != entry["crc32"]:
+                    raise CheckpointError(
+                        f"checkpoint step {step} leaf {i} fails its crc32 "
+                        f"check ({crc} != recorded {entry['crc32']}) — the "
+                        "data is corrupt; restore from another snapshot")
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            elif host:
+                out.append(arr)
+            else:
+                out.append(jax.numpy.asarray(arr))
         return jax.tree.unflatten(treedef, out)

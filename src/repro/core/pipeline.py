@@ -85,6 +85,50 @@ class PipelineState:
     total_T: int             # timesteps simulated since the stream began
     worst_compute: int       # max per-timestep CM cycles seen so far
 
+    def to_dict(self) -> dict:
+        """Deterministic, alias-free serializable view of the clocks.
+
+        Every value is a fresh int64 numpy array (0-d for scalars): the
+        dict can be written through the checkpoint layer and never shares
+        storage with the live simulation state.
+        """
+        return {
+            "cm_free": np.asarray(self.cm_free, np.int64).copy(),
+            "recv_ready": np.asarray(self.recv_ready, np.int64).copy(),
+            "nu_free": np.int64(self.nu_free),
+            "cm_busy": np.asarray(self.cm_busy, np.int64).copy(),
+            "nu_busy": np.int64(self.nu_busy),
+            "total_T": np.int64(self.total_T),
+            "worst_compute": np.int64(self.worst_compute),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PipelineState":
+        """Rebuild a resume point from :meth:`to_dict` output."""
+        return cls(
+            cm_free=np.asarray(d["cm_free"], np.int64).copy(),
+            recv_ready=np.asarray(d["recv_ready"], np.int64).copy(),
+            nu_free=int(d["nu_free"]),
+            cm_busy=np.asarray(d["cm_busy"], np.int64).copy(),
+            nu_busy=int(d["nu_busy"]),
+            total_T=int(d["total_T"]),
+            worst_compute=int(d["worst_compute"]),
+        )
+
+    @classmethod
+    def zero(cls, n_cm: int = 9) -> "PipelineState":
+        """The stream-start state: identical to passing ``state=None``.
+
+        ``simulate_pipeline`` initializes all clocks/counters to zero when
+        no state is given, so resuming from ``zero()`` is bit-identical to
+        a fresh simulation — snapshots use it to give never-stepped slots
+        a fixed serialized shape instead of a structure-changing ``None``.
+        """
+        return cls(cm_free=np.zeros(n_cm, np.int64),
+                   recv_ready=np.zeros(n_cm, np.int64), nu_free=0,
+                   cm_busy=np.zeros(n_cm, np.int64), nu_busy=0,
+                   total_T=0, worst_compute=0)
+
 
 @dataclasses.dataclass
 class PipelineResult:

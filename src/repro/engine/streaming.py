@@ -51,10 +51,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.pipeline import PipelineState
 from .cost import estimate_cost, estimate_multicore_cost
 from .inference import SNNEngine, init_state, reset_slot, run_chunk
 
-__all__ = ["SlotUpdate", "StreamSessionManager"]
+__all__ = ["SESSION_SCHEMA_VERSION", "SlotUpdate", "StreamSessionManager"]
+
+# Serialized-session schema version (see ``StreamSessionManager.state_dict``).
+# Bump when the snapshot layout changes; ``load_state_dict`` refuses newer
+# schemas with a clean error instead of misreading them.
+SESSION_SCHEMA_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -67,6 +73,7 @@ class SlotUpdate:
     chunk_spikes: int            # output spikes this chunk (all layers)
     cycles: int                  # cumulative async-pipeline makespan cycles
     energy_uj: float             # cumulative calibrated energy
+    spikes: int = 0              # cumulative output spikes (all layers)
     # Multi-core plans only (engine compiled with a CoreSchedule): the
     # stream's cumulative per-core cycle attribution and the current load
     # imbalance (max/mean busy) of its placement.  None/0 on single core.
@@ -239,7 +246,136 @@ class StreamSessionManager:
                 chunk_spikes=chunk_spikes,
                 cycles=int(self.slot_cycles[slot]),
                 energy_uj=float(self.slot_energy_uj[slot]),
+                spikes=int(self.slot_spikes[slot]),
                 per_core_cycles=per_core_cycles,
                 load_imbalance=imbalance,
             )
         return updates
+
+    # -- durability: serializable session state ----------------------------
+    @property
+    def n_cores(self) -> int:
+        return self._schedule.n_cores if self._schedule is not None else 1
+
+    def _pipe_dicts(self, slot: int) -> list:
+        """Per-core clock dicts for one slot, ``None`` normalized to zeros.
+
+        A never-stepped slot's ``None`` clock is bit-equivalent to
+        :meth:`PipelineState.zero` (``simulate_pipeline`` zero-initializes
+        when no state is given), so the serialized structure is identical
+        for every slot — a requirement for restoring through the fixed-
+        structure checkpoint format.
+        """
+        ps = self._pipe_state[slot]
+        if ps is None:
+            per_core = [PipelineState.zero() for _ in range(self.n_cores)]
+        elif isinstance(ps, list):
+            per_core = ps
+        else:
+            per_core = [ps]
+        assert len(per_core) == self.n_cores, (len(per_core), self.n_cores)
+        return [p.to_dict() for p in per_core]
+
+    def state_dict(self) -> dict:
+        """The session's full durable state as a deterministic pure-numpy
+        tree: every live slot's integer :class:`EngineState` leaves, the
+        session table (open/ended flags, cumulative per-slot accounting),
+        and the resumable async-handshake clocks.
+
+        Every array is a fresh host copy — nothing aliases the manager's
+        live buffers, so ``state_dict`` at tick k is immutable evidence of
+        tick k no matter how the session advances afterwards.  The schema
+        is pinned by ``tests/test_streaming_durability.py``; round-tripping
+        through :meth:`load_state_dict` is bit-exact (tested for any
+        snapshot boundary, chunking and slot open/close interleaving).
+        """
+        st = self.state
+        return {
+            "schema": np.int64(SESSION_SCHEMA_VERSION),
+            "engine_state": {
+                "vmem": [None if v is None else np.asarray(v).copy()
+                         for v in st.vmem],
+                "readout_acc": np.asarray(st.readout_acc).copy(),
+                "out_counts": np.asarray(st.out_counts).copy(),
+                "in_counts": np.asarray(st.in_counts).copy(),
+            },
+            "table": {
+                "active": np.asarray(self.active, np.bool_),
+                "ended": np.asarray(self.ended, np.bool_),
+                "timesteps": self.slot_timesteps.copy(),
+                "spikes": self.slot_spikes.copy(),
+                "cycles": self.slot_cycles.copy(),
+                "energy_uj": self.slot_energy_uj.copy(),
+                "route_cycles": self._slot_route_cycles.copy(),
+                "core_cycles": self.slot_core_cycles.copy(),
+                "imbalance": self.slot_imbalance.copy(),
+                "ticks": np.int64(self.ticks),
+            },
+            "clocks": [self._pipe_dicts(s) for s in range(self.capacity)],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore the session to a :meth:`state_dict` snapshot, bit-exactly.
+
+        The manager must have been constructed over the same engine
+        geometry (capacity, chunk size, core count, layer shapes); a
+        mismatched snapshot raises ``ValueError`` before any state is
+        touched.  After the load, every subsequent ``step`` emits spikes,
+        readouts and cumulative cycle/energy attribution identical to a
+        session that was never interrupted.
+        """
+        schema = int(d["schema"])
+        if schema > SESSION_SCHEMA_VERSION:
+            raise ValueError(
+                f"session snapshot schema {schema} is newer than this "
+                f"build's {SESSION_SCHEMA_VERSION} — upgrade the code or "
+                "re-snapshot")
+        es, table, clocks = d["engine_state"], d["table"], d["clocks"]
+        if len(table["active"]) != self.capacity:
+            raise ValueError(
+                f"snapshot holds {len(table['active'])} slots but this "
+                f"session has capacity {self.capacity} — restore onto a "
+                "session opened with the snapshot's geometry")
+        if len(clocks) != self.capacity \
+                or any(len(c) != self.n_cores for c in clocks):
+            raise ValueError(
+                f"snapshot clock layout {len(clocks)}x"
+                f"{len(clocks[0]) if clocks else 0} does not match this "
+                f"session's {self.capacity}x{self.n_cores} (capacity x "
+                "cores) — was it taken on a different compiled plan?")
+        vmem = []
+        for cur, new in zip(self.state.vmem, es["vmem"]):
+            if (cur is None) != (new is None) or (
+                    cur is not None and cur.shape != np.shape(new)):
+                raise ValueError(
+                    "snapshot Vmem shapes do not match this engine's "
+                    "layers — restore onto the same network/spec")
+            vmem.append(None if new is None
+                        else jnp.asarray(new, jnp.int32))
+        self.state = dataclasses.replace(
+            self.state,
+            vmem=tuple(vmem),
+            readout_acc=jnp.asarray(es["readout_acc"],
+                                    self.state.readout_acc.dtype),
+            out_counts=jnp.asarray(es["out_counts"], jnp.int32),
+            in_counts=jnp.asarray(es["in_counts"], jnp.int32),
+        )
+        self.active = [bool(a) for a in np.asarray(table["active"])]
+        self.ended = [bool(e) for e in np.asarray(table["ended"])]
+        self.slot_timesteps = np.asarray(table["timesteps"], np.int64).copy()
+        self.slot_spikes = np.asarray(table["spikes"], np.int64).copy()
+        self.slot_cycles = np.asarray(table["cycles"], np.int64).copy()
+        self.slot_energy_uj = np.asarray(table["energy_uj"],
+                                         np.float64).copy()
+        self._slot_route_cycles = np.asarray(table["route_cycles"],
+                                             np.int64).copy()
+        self.slot_core_cycles = np.asarray(table["core_cycles"],
+                                           np.int64).copy()
+        self.slot_imbalance = np.asarray(table["imbalance"],
+                                         np.float64).copy()
+        self.ticks = int(table["ticks"])
+        pipe = []
+        for per_core in clocks:
+            states = [PipelineState.from_dict(p) for p in per_core]
+            pipe.append(states if self._schedule is not None else states[0])
+        self._pipe_state = pipe

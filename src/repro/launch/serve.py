@@ -238,15 +238,56 @@ class StreamingSNNServer:
     one fixed-shape jitted chunk step.  Finished streams retire and free
     their slot for the next waiter; idle slots ride along as all-zero spike
     tiles that the zero-skip path eliminates.
+
+    Durability (``runtime.fault_tolerance`` + ``CompiledSNN.snapshot``):
+
+      * ``watchdog_s`` arms a :class:`StepWatchdog` around every session
+        step — a hung tick becomes a :class:`RestartableFailure`;
+      * every tick runs through ``retrying``: a poisoned tick rewinds the
+        session (and all request cursors) to the last completed tick and
+        replays, up to ``max_restarts`` times;
+      * ``snapshot_dir``/``snapshot_every`` persist the full serving state
+        (weights, session slots, stream-id/cursor table, finished results)
+        every N ticks; :meth:`restore` resumes it in a fresh process,
+        bit-exactly — the upgrade drill (``tools/upgrade_drill.py``)
+        SIGKILLs a serving process mid-chunk and proves zero streams lose
+        state.
     """
 
-    def __init__(self, compiled, capacity: int = 4, chunk_T: int = 2):
-        self.sessions = compiled.open_stream(capacity=capacity,
-                                             chunk_T=chunk_T)
+    def __init__(self, compiled, capacity: int = 4, chunk_T: int = 2, *,
+                 watchdog_s: Optional[float] = None, max_restarts: int = 3,
+                 snapshot_dir: Optional[str] = None, snapshot_every: int = 0,
+                 fail_at_tick: Optional[int] = None, _session=None):
+        from repro.runtime.fault_tolerance import StepWatchdog, retrying
+
+        self.compiled = compiled
+        self.sessions = (_session if _session is not None
+                         else compiled.open_stream(capacity=capacity,
+                                                   chunk_T=chunk_T))
         self.chunk_T = chunk_T
         self.waiting: list = []
         self.done: list = []
         self.slots: dict = {}          # slot -> SNNRequest
+        self.ticks = 0
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        # Fault injection for tests/drills: raise RestartableFailure once,
+        # mid-tick (after the session stepped, before bookkeeping) — the
+        # worst case the rewind has to undo.  ``mid_tick_hook`` is the
+        # generic form (the upgrade drill SIGKILLs the process from it).
+        self.fail_at_tick = fail_at_tick
+        self.mid_tick_hook = None
+        self._watchdog = (StepWatchdog(watchdog_s)
+                          if watchdog_s is not None else None)
+        self._rewind_point = None
+        self._step = retrying(self._tick, self._rewind,
+                              max_restarts=max_restarts)
+        self._mark()
+
+    @property
+    def restarts(self) -> int:
+        """Rewind-and-replay count since the server started."""
+        return self._step.state["restarts"]
 
     def submit(self, req: SNNRequest):
         req.submitted_at = time.monotonic()
@@ -259,14 +300,60 @@ class StreamingSNNServer:
                 return
             self.slots[slot] = self.waiting.pop(0)
 
-    def step(self) -> bool:
+    # -- fault tolerance: rewind-and-replay --------------------------------
+    def _mark(self):
+        """Record the last-completed-tick state the next rewind returns to.
+
+        The session part is a pure-numpy ``state_dict`` (never aliases live
+        buffers); the request part saves each request's mutable progress
+        fields so the *same* objects callers hold are rolled back.
+        """
+        reqs = list(self.slots.values()) + self.waiting + self.done
+        self._rewind_point = {
+            "session": self.sessions.state_dict(),
+            "slots": dict(self.slots),
+            "waiting": list(self.waiting),
+            "done": list(self.done),
+            "ticks": self.ticks,
+            "reqs": [(r, r.cursor, r.readout, r.cycles, r.energy_uj,
+                      r.first_reply_at, r.done_at) for r in reqs],
+        }
+
+    def _rewind(self, *args, **kwargs):
+        cp = self._rewind_point
+        self.sessions.load_state_dict(cp["session"])
+        self.slots = dict(cp["slots"])
+        self.waiting = list(cp["waiting"])
+        self.done = list(cp["done"])
+        self.ticks = cp["ticks"]
+        for r, cur, ro, cyc, uj, fr, da in cp["reqs"]:
+            r.cursor, r.readout, r.cycles, r.energy_uj = cur, ro, cyc, uj
+            r.first_reply_at, r.done_at = fr, da
+        log.info("rewound to tick %d and replaying", self.ticks)
+
+    def _tick(self) -> bool:
         self._admit()
         if not self.slots:
             return False
-        chunks = {}
-        for slot, req in self.slots.items():
-            chunks[slot] = req.events[req.cursor:req.cursor + self.chunk_T]
-        updates = self.sessions.step(chunks)
+        chunks = {slot: req.events[req.cursor:req.cursor + self.chunk_T]
+                  for slot, req in self.slots.items()}
+        if self._watchdog is not None:
+            self._watchdog.arm()
+        try:
+            updates = self.sessions.step(chunks)
+        finally:
+            if self._watchdog is not None:
+                self._watchdog.disarm()
+        if self._watchdog is not None:
+            self._watchdog.check()
+        if self.mid_tick_hook is not None:
+            self.mid_tick_hook(self.ticks + 1)
+        if self.fail_at_tick is not None and self.ticks + 1 >= self.fail_at_tick:
+            from repro.runtime.fault_tolerance import RestartableFailure
+
+            self.fail_at_tick = None
+            raise RestartableFailure(
+                f"injected fault at tick {self.ticks + 1}")
         now = time.monotonic()
         for slot, up in updates.items():
             req = self.slots[slot]
@@ -281,7 +368,94 @@ class StreamingSNNServer:
                 self.done.append(req)
                 self.sessions.close(slot)   # free the slot: continuous batching
                 del self.slots[slot]
+        self.ticks += 1
         return True
+
+    def step(self) -> bool:
+        # Mark *now*, not after: requests submitted since the last tick are
+        # part of the state a mid-tick failure must rewind to.
+        self._mark()
+        alive = self._step()
+        if alive and self.snapshot_dir and self.snapshot_every \
+                and self.ticks % self.snapshot_every == 0:
+            self.save_snapshot()
+        return alive
+
+    # -- durability: process-level snapshot/restore ------------------------
+    @staticmethod
+    def _result_json(req: SNNRequest) -> dict:
+        return {"rid": int(req.rid), "cursor": int(req.cursor),
+                "readout": (None if req.readout is None
+                            else np.asarray(req.readout).tolist()),
+                "cycles": int(req.cycles),
+                "energy_uj": float(req.energy_uj)}
+
+    def save_snapshot(self) -> None:
+        """Persist the complete serving state (atomic, checksummed).
+
+        One ``CompiledSNN.snapshot`` step at ``step=self.ticks``: weights +
+        the live session, plus the server's own bookkeeping (stream-id <->
+        slot map, per-stream cursors, finished results) as JSON ``extra``.
+        Replay after :meth:`restore` is implicit — chunks are re-derived
+        from the restored cursors.
+        """
+        assert self.snapshot_dir, "construct the server with snapshot_dir="
+        extra = {"server": {
+            "ticks": int(self.ticks),
+            "slots": {str(slot): int(req.rid)
+                      for slot, req in self.slots.items()},
+            "cursors": {str(req.rid): int(req.cursor)
+                        for req in list(self.slots.values()) + self.waiting},
+            "waiting": [int(req.rid) for req in self.waiting],
+            "done": [self._result_json(req) for req in self.done],
+        }}
+        self.compiled.snapshot(self.snapshot_dir, step=self.ticks,
+                               sessions=[self.sessions], extra=extra)
+
+    @classmethod
+    def restore(cls, path, requests_by_rid: dict, compiled=None, *,
+                watchdog_s: Optional[float] = None, max_restarts: int = 3,
+                snapshot_every: int = 0, step: Optional[int] = None
+                ) -> "StreamingSNNServer":
+        """Resume a server from its latest :meth:`save_snapshot`.
+
+        ``requests_by_rid`` maps stream id -> :class:`SNNRequest` carrying
+        the stream's (deterministically regenerated) events; in-flight
+        requests resume at their snapshotted cursor, finished results are
+        reloaded from the snapshot.  The restored server then serves every
+        stream bit-identically to one that was never killed.
+        """
+        from repro import spidr
+
+        info = spidr.read_snapshot_meta(path, step)
+        compiled = spidr.restore(path, compiled=compiled, step=info["step"])
+        session = compiled.sessions[-1]
+        srv = cls(compiled, capacity=session.capacity,
+                  chunk_T=session.chunk_T, watchdog_s=watchdog_s,
+                  max_restarts=max_restarts, snapshot_dir=str(path),
+                  snapshot_every=snapshot_every, _session=session)
+        state = info["extra"]["server"]
+        srv.ticks = int(state["ticks"])
+        cursors = {int(k): int(v) for k, v in state["cursors"].items()}
+        for slot, rid in state["slots"].items():
+            req = requests_by_rid[int(rid)]
+            req.cursor = cursors[int(rid)]
+            srv.slots[int(slot)] = req
+        srv.waiting = [requests_by_rid[int(rid)]
+                       for rid in state["waiting"]]
+        for req in srv.waiting:
+            req.cursor = cursors[int(req.rid)]
+        for d in state["done"]:
+            req = requests_by_rid.get(int(d["rid"])) or SNNRequest(
+                rid=int(d["rid"]), events=np.zeros((0,), np.float32))
+            req.cursor = int(d["cursor"])
+            req.readout = (None if d["readout"] is None
+                           else np.asarray(d["readout"], np.int32))
+            req.cycles = int(d["cycles"])
+            req.energy_uj = float(d["energy_uj"])
+            srv.done.append(req)
+        srv._mark()
+        return srv
 
 
 def serve_snn(args):
@@ -317,8 +491,11 @@ def serve_snn(args):
                  timesteps=spec.timesteps, hw=spec.input_hw)
 
     if args.streaming:
-        server = StreamingSNNServer(compiled, capacity=args.capacity,
-                                    chunk_T=args.chunk_T)
+        server = StreamingSNNServer(
+            compiled, capacity=args.capacity, chunk_T=args.chunk_T,
+            watchdog_s=getattr(args, "watchdog_s", None),
+            snapshot_dir=getattr(args, "snapshot_dir", None),
+            snapshot_every=getattr(args, "snapshot_every", 0))
         for r in range(args.requests):
             server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
         t0 = time.monotonic()
@@ -401,6 +578,18 @@ def main():
                          "chunks, replies are incremental")
     ap.add_argument("--chunk-T", type=int, default=2, dest="chunk_T",
                     help="timesteps per delivered chunk in --streaming mode")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    dest="watchdog_s",
+                    help="--streaming: per-tick watchdog deadline; a hung "
+                         "tick rewinds to the last completed tick and "
+                         "replays")
+    ap.add_argument("--snapshot-dir", default=None, dest="snapshot_dir",
+                    help="--streaming: persist the full serving state here "
+                         "(weights + live sessions + cursors) for "
+                         "zero-downtime restore")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    dest="snapshot_every",
+                    help="--streaming: snapshot every N ticks (0 = never)")
     ap.add_argument("--n-cores", type=int, default=1, dest="n_cores",
                     help="SNN path: compile the network across a grid of N "
                          "SpiDR cores (repro.compiler) — bit-exact outputs, "

@@ -105,7 +105,16 @@ class StragglerDetector:
 
 
 def retrying(step_fn, restore_fn, max_restarts: int = 3):
-    """Wrap step_fn; on RestartableFailure restore state and retry."""
+    """Wrap step_fn; on RestartableFailure restore state and retry.
+
+    ``restore_fn`` is called with the failing call's arguments; if it
+    returns a tuple, that replaces the positional args for the retry —
+    a ``None`` return keeps them (stateful restore: the serving loop's
+    restore_fn rewinds internal session state and retries the same tick).
+    Any other exception type passes straight through: only failures
+    explicitly marked restartable are retried.  ``wrapped.state``
+    exposes the cumulative restart count.
+    """
     state = {"restarts": 0}
 
     def wrapped(*args, **kwargs):
@@ -116,7 +125,9 @@ def retrying(step_fn, restore_fn, max_restarts: int = 3):
                 state["restarts"] += 1
                 if state["restarts"] > max_restarts:
                     raise
-                args = restore_fn(*args, **kwargs)
+                new_args = restore_fn(*args, **kwargs)
+                if new_args is not None:
+                    args = tuple(new_args)
 
     wrapped.state = state
     return wrapped

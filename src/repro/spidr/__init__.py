@@ -17,6 +17,10 @@ backend, chunking, stream capacity, compiler overrides), then compile:
     compiled = spidr.load(path)           # ...rebuilt deployment
     report = compiled.verify()            # round-trip parity proof
 
+    compiled.snapshot(path)               # live serving state (weights +
+    compiled = spidr.restore(path)        #  every open stream) -> resumed
+                                          #  bit-exactly in a fresh process
+
 Every path is bit-exact with the internal layers it fronts
 (``repro.engine``, ``repro.compiler``, ``repro.snn.export`` — documented
 internals; see ``docs/api.md`` for the lifecycle walkthrough).
@@ -28,6 +32,8 @@ from .compiled import (
     VerifyReport,
     compile,
     load,
+    read_snapshot_meta,
+    restore,
 )
 from .target import BACKENDS, PRECISION_PAIRS, DeployTarget
 
@@ -41,4 +47,6 @@ __all__ = [
     "VerifyReport",
     "compile",
     "load",
+    "read_snapshot_meta",
+    "restore",
 ]

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import os
 from typing import Optional
 
 import jax
@@ -34,10 +36,12 @@ import numpy as np
 from ..checkpoint.checkpoint import Checkpointer
 from ..compiler import compile_network
 from ..core.network import SNNSpec
+from ..core.pipeline import PipelineState
 from ..core.quant import QuantSpec
 from ..engine.cost import estimate_cost, estimate_multicore_cost
 from ..engine.inference import (
     EngineConfig,
+    EngineLayer,
     EngineOutput,
     SNNEngine,
     build_engine,
@@ -45,8 +49,13 @@ from ..engine.inference import (
     run_engine,
     run_reference,
 )
-from ..engine.streaming import SlotUpdate, StreamSessionManager
+from ..engine.streaming import (
+    SESSION_SCHEMA_VERSION,
+    SlotUpdate,
+    StreamSessionManager,
+)
 from ..snn.export import (
+    ExportedLayer,
     ExportedNetwork,
     RoundTrip,
     deploy,
@@ -63,7 +72,17 @@ __all__ = [
     "VerifyReport",
     "compile",
     "load",
+    "read_snapshot_meta",
+    "restore",
 ]
+
+# Live-session snapshot artifact: one Checkpointer step whose metadata
+# carries this key.  Distinct from the ``snn.export`` weight artifact
+# (``CompiledSNN.save``) — a snapshot additionally serializes every open
+# session's slot state, table and handshake clocks, so ``spidr.restore``
+# resumes serving bit-exactly in a fresh process.
+_SNAPSHOT_META_KEY = "spidr_session_snapshot"
+SNAPSHOT_VERSION = 1
 
 
 def _engine_config(target: DeployTarget) -> EngineConfig:
@@ -132,6 +151,23 @@ class StreamSession:
     def occupancy(self) -> int:
         return self._manager.occupancy
 
+    @property
+    def active(self) -> tuple:
+        """Per-slot open flags (index = slot id)."""
+        return tuple(self._manager.active)
+
+    def state_dict(self) -> dict:
+        """The session's full durable state as a deterministic pure-numpy
+        tree (see ``StreamSessionManager.state_dict``): every slot's
+        integer engine state, the session table, and the resumable
+        handshake clocks.  Fresh host copies — never aliases live state."""
+        return self._manager.state_dict()
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore the session to a :meth:`state_dict` snapshot bit-exactly
+        (the session must have matching capacity/engine geometry)."""
+        self._manager.load_state_dict(d)
+
     def open(self) -> Optional[int]:
         """Allocate a slot for a new stream; None if the session is full."""
         return self._manager.open()
@@ -185,6 +221,7 @@ class CompiledSNN:
         self.params = params
         self._base_engine = base_engine  # single-core engine (oracle)
         self._jit_run = None
+        self._sessions: list = []       # every StreamSession opened here
 
     # -- introspection -----------------------------------------------------
     @property
@@ -249,7 +286,16 @@ class CompiledSNN:
                               hint="concurrent persistent-Vmem stream slots")
         _require_positive_int("chunk_T", chunk_T,
                               hint="timesteps delivered per streaming tick")
-        return StreamSession(self.engine, capacity=capacity, chunk_T=chunk_T)
+        session = StreamSession(self.engine, capacity=capacity,
+                                chunk_T=chunk_T)
+        self._sessions.append(session)
+        return session
+
+    @property
+    def sessions(self) -> tuple:
+        """Every :class:`StreamSession` opened on this deployment, in
+        :meth:`open_stream` order — the set :meth:`snapshot` serializes."""
+        return tuple(self._sessions)
 
     # -- chip cost ---------------------------------------------------------
     def cost(self, result=None, input_counts=None):
@@ -290,6 +336,62 @@ class CompiledSNN:
                 "ExportedNetwork to make save()/load() available")
         save_exported(Checkpointer(str(path)), step, self.exported,
                       spec=self.spec)
+
+    def _layer_arrays(self) -> list:
+        """The deployment's integer weights as plain numpy, one
+        ``{"w_q", "w_scale", "thr_int"}`` per weight layer (None per pool).
+
+        ``w_scale`` is widened to float64 so both provenances serialize
+        losslessly: a per-tensor scale is a python float, a per-channel
+        exported scale is float32 — either round-trips exactly.
+        """
+        out = []
+        for el in self._base_engine.layers:
+            if el.kind not in ("conv", "fc"):
+                out.append(None)
+                continue
+            out.append({
+                "w_q": np.asarray(el.w_q, np.int8),
+                "w_scale": np.asarray(el.w_scale, np.float64),
+                "thr_int": np.asarray(el.thr_int, np.int32),
+            })
+        return out
+
+    def snapshot(self, path, step: int = 0, sessions=None,
+                 extra: Optional[dict] = None) -> None:
+        """Persist the complete live serving state under ``path``.
+
+        One atomic, checksummed checkpoint step holding the deployment's
+        integer weights plus every open streaming session's durable state
+        (slot Vmems, session table, resumable handshake clocks — see
+        ``StreamSessionManager.state_dict``).  ``spidr.restore(path)``
+        rebuilds the deployment in a fresh process and resumes every
+        stream bit-exactly: the same spikes, readouts and cumulative
+        cycle/energy attribution as if serving was never interrupted.
+
+        ``sessions`` defaults to every session opened via
+        :meth:`open_stream`; ``extra`` is JSON-serializable caller
+        bookkeeping (e.g. a server's stream-id/cursor table), returned by
+        :func:`read_snapshot_meta`.
+        """
+        sessions = self.sessions if sessions is None else tuple(sessions)
+        target_info = dataclasses.asdict(self.target)
+        target_info["block"] = list(target_info["block"])
+        info = {
+            "version": SNAPSHOT_VERSION,
+            "session_schema": SESSION_SCHEMA_VERSION,
+            "provenance": ("exported" if self.exported is not None
+                           else "per_tensor"),
+            "target": target_info,
+            "spec": _spec_info(self.spec),
+            "sessions": [{"capacity": s.capacity, "chunk_T": s.chunk_T}
+                         for s in sessions],
+            "extra": extra or {},
+        }
+        tree = {"layers": self._layer_arrays(),
+                "sessions": [s.state_dict() for s in sessions]}
+        Checkpointer(str(path)).save(step, tree,
+                                     extra_meta={_SNAPSHOT_META_KEY: info})
 
     # -- the proof ---------------------------------------------------------
     def verify(self, events=None, params=None, batch: int = 2,
@@ -338,6 +440,25 @@ class CompiledSNN:
         return VerifyReport(exact=exact, reference_exact=reference_exact,
                             single_core_exact=single_core_exact,
                             roundtrip=roundtrip)
+
+
+def _apply_schedule(base: SNNEngine, spec: SNNSpec, target: DeployTarget,
+                    cfg: EngineConfig) -> SNNEngine:
+    """Bake the target's multi-core plan into ``base`` (identity on 1 core).
+
+    Deterministic in (spec, target): the compiler's partition/place/
+    schedule has no randomness, so a freshly compiled replica gets the
+    same plan — a precondition for bit-exact multi-core session migration.
+    """
+    if target.n_cores <= 1:
+        return base
+    schedule = compile_network(
+        spec, n_cores=target.n_cores, qspec=cfg.qspec,
+        assumed_sparsity=target.assumed_sparsity,
+        force_mode=target.force_mode,
+        force_stationarity=target.stationarity)
+    return compile_engine(base, schedule,
+                          device_parallel=target.device_parallel)
 
 
 def compile(network, params=None, target: Optional[DeployTarget] = None,
@@ -398,15 +519,7 @@ def compile(network, params=None, target: Optional[DeployTarget] = None,
             "core.network.gesture_net/optical_flow_net (or a config's "
             "reduced()), or an exported network with snn.train + "
             "snn.export")
-    engine = base
-    if target.n_cores > 1:
-        schedule = compile_network(
-            spec, n_cores=target.n_cores, qspec=cfg.qspec,
-            assumed_sparsity=target.assumed_sparsity,
-            force_mode=target.force_mode,
-            force_stationarity=target.stationarity)
-        engine = compile_engine(base, schedule,
-                                device_parallel=target.device_parallel)
+    engine = _apply_schedule(base, spec, target, cfg)
     return CompiledSNN(spec=spec, target=target, engine=engine,
                        base_engine=base, exported=exported, params=params)
 
@@ -457,3 +570,250 @@ def load(path, spec: Optional[SNNSpec] = None,
     if target is None:
         target = DeployTarget(weight_bits=exported.weight_bits)
     return compile(exported, spec, target)
+
+
+# ---------------------------------------------------------------------------
+# Live-session snapshots: CompiledSNN.snapshot -> spidr.restore
+# ---------------------------------------------------------------------------
+def _spec_info(spec: SNNSpec) -> dict:
+    """The spec geometry a snapshot pins (and restore re-validates)."""
+    return {"name": spec.name, "input_hw": list(spec.input_hw),
+            "in_channels": int(spec.in_channels),
+            "timesteps": int(spec.timesteps), "readout": spec.readout,
+            "n_layers": len(spec.layers)}
+
+
+def _target_from_info(d: dict) -> DeployTarget:
+    """Rebuild the snapshot's :class:`DeployTarget` from its JSON form."""
+    kw = dict(d)
+    kw["block"] = tuple(kw["block"])
+    try:
+        return DeployTarget(**kw)
+    except TypeError as e:
+        raise ValueError(
+            f"the snapshot's DeployTarget does not match this build's "
+            f"fields: {e} — re-snapshot with this version") from e
+
+
+def _layer_arrays_template(spec: SNNSpec, per_channel: bool) -> list:
+    """Structure template for the snapshot's weight tree.
+
+    Shapes are derived from the spec alone (weights are not needed to
+    *describe* the tree, only to fill it); ``per_channel`` mirrors the
+    provenance recorded in the snapshot — exported networks carry (K,)
+    scale/threshold vectors, per-tensor deployments carry scalars.
+    """
+    like = []
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            f, k = layer.conv.kh * layer.conv.kw * layer.c_in, layer.c_out
+        elif layer.kind == "fc":
+            f, k = layer.c_in, layer.c_out
+        else:
+            like.append(None)
+            continue
+        sshape = (k,) if per_channel else ()
+        like.append({"w_q": np.zeros((f, k), np.int8),
+                     "w_scale": np.zeros(sshape, np.float64),
+                     "thr_int": np.zeros(sshape, np.int32)})
+    return like
+
+
+def _session_state_template(spec: SNNSpec, capacity: int,
+                            n_cores: int) -> dict:
+    """Structure template matching ``StreamSessionManager.state_dict``.
+
+    Built engine-free: Vmem shapes come from the network definition
+    (``core.network._init_state``), so restore can describe the serialized
+    tree before any engine exists — the weights themselves are part of the
+    same checkpoint being restored.
+    """
+    from ..core.network import _init_state
+
+    vmem = [None if v is None else np.zeros(v.shape, np.int32)
+            for v in _init_state(spec, capacity)]
+    if spec.readout == "rate":
+        acc = np.zeros((capacity, spec.layers[-1].c_out), np.int32)
+    else:
+        acc = np.zeros(next(v for v in reversed(vmem)
+                            if v is not None).shape, np.int32)
+    n_l = sum(1 for layer in spec.layers if layer.kind in ("conv", "fc"))
+    return {
+        "schema": np.int64(SESSION_SCHEMA_VERSION),
+        "engine_state": {
+            "vmem": vmem,
+            "readout_acc": acc,
+            "out_counts": np.zeros((n_l, capacity), np.int32),
+            "in_counts": np.zeros((n_l, capacity), np.int32),
+        },
+        "table": {
+            "active": np.zeros(capacity, np.bool_),
+            "ended": np.zeros(capacity, np.bool_),
+            "timesteps": np.zeros(capacity, np.int64),
+            "spikes": np.zeros(capacity, np.int64),
+            "cycles": np.zeros(capacity, np.int64),
+            "energy_uj": np.zeros(capacity, np.float64),
+            "route_cycles": np.zeros((capacity, n_cores), np.int64),
+            "core_cycles": np.zeros((capacity, n_cores), np.int64),
+            "imbalance": np.ones(capacity, np.float64),
+            "ticks": np.int64(0),
+        },
+        "clocks": [[PipelineState.zero().to_dict()
+                    for _ in range(n_cores)] for _ in range(capacity)],
+    }
+
+
+def _compile_from_arrays(spec: SNNSpec, target: DeployTarget,
+                         cfg: EngineConfig, arrays: list,
+                         per_channel: bool, name: str) -> CompiledSNN:
+    """Rebuild a deployment from a snapshot's serialized integer weights,
+    through the same build chain the original took (``deploy`` for
+    exported networks, direct :class:`EngineLayer` construction mirroring
+    ``build_engine`` for per-tensor) — so the restored engine is
+    bit-identical to the one snapshotted."""
+    if per_channel:
+        ex_layers = tuple(
+            None if d is None else ExportedLayer(
+                w_q=np.asarray(d["w_q"], np.int8),
+                scale=np.asarray(d["w_scale"], np.float32),
+                thr_int=np.asarray(d["thr_int"], np.int32))
+            for d in arrays)
+        exported = ExportedNetwork(name=name,
+                                   weight_bits=target.weight_bits,
+                                   layers=ex_layers)
+        base = deploy(exported, spec, cfg, n_cores=1)
+    else:
+        exported = None
+        layers = []
+        for layer, d in zip(spec.layers, arrays):
+            if layer.kind == "conv":
+                layers.append(EngineLayer(
+                    kind="conv", neuron=layer.conv.neuron,
+                    w_q=jnp.asarray(np.asarray(d["w_q"], np.int8)),
+                    w_scale=float(d["w_scale"]),
+                    thr_int=int(d["thr_int"]),
+                    kh=layer.conv.kh, kw=layer.conv.kw,
+                    stride=layer.conv.stride, padding=layer.conv.padding))
+            elif layer.kind == "fc":
+                layers.append(EngineLayer(
+                    kind="fc", neuron=layer.fc.neuron,
+                    w_q=jnp.asarray(np.asarray(d["w_q"], np.int8)),
+                    w_scale=float(d["w_scale"]),
+                    thr_int=int(d["thr_int"])))
+            elif layer.kind == "pool":
+                layers.append(EngineLayer(kind="pool"))
+            else:
+                layers.append(EngineLayer(kind="adaptive_pool",
+                                          target_hw=layer.target_hw))
+        base = SNNEngine(spec=spec, cfg=cfg, layers=tuple(layers))
+    engine = _apply_schedule(base, spec, target, cfg)
+    return CompiledSNN(spec=spec, target=target, engine=engine,
+                       base_engine=base, exported=exported)
+
+
+def read_snapshot_meta(path, step: Optional[int] = None) -> dict:
+    """Read a :meth:`CompiledSNN.snapshot` artifact's metadata.
+
+    No state is loaded — just the JSON record: format version, deployment
+    target, spec geometry, session geometries, and the caller's ``extra``
+    bookkeeping, plus the resolved ``step``.  Raises ``FileNotFoundError``
+    when no step exists and ``ValueError`` when the checkpoint is not a
+    session snapshot.
+    """
+    ckpt = Checkpointer(str(path))
+    if step is None:
+        step = ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no snapshot steps under {ckpt.directory} — was "
+                "CompiledSNN.snapshot called?")
+    with open(os.path.join(ckpt.directory,
+                           f"step_{step:09d}", "meta.json")) as f:
+        meta = json.load(f)
+    info = meta.get(_SNAPSHOT_META_KEY)
+    if info is None:
+        raise ValueError(
+            f"checkpoint step {step} under {ckpt.directory} is not a spidr "
+            f"session snapshot (no {_SNAPSHOT_META_KEY!r} metadata) — "
+            "weight artifacts from CompiledSNN.save load via spidr.load; "
+            "snapshots come from CompiledSNN.snapshot")
+    return dict(info, step=int(step))
+
+
+def restore(path, spec: Optional[SNNSpec] = None,
+            compiled: Optional[CompiledSNN] = None,
+            step: Optional[int] = None) -> CompiledSNN:
+    """Resume a serving deployment from a :meth:`CompiledSNN.snapshot`.
+
+    Validates the checkpoint (crc32 per leaf, format/schema versions),
+    rebuilds the deployment from its serialized integer weights onto the
+    snapshot's :class:`DeployTarget`, reopens every serialized streaming
+    session and reloads its slots, table and handshake clocks.  Every
+    resumed stream then emits spikes, readouts and cumulative cycle/energy
+    attribution byte-identical to the uninterrupted run — on any backend
+    and core count the snapshot was taken at.
+
+    ``spec`` is only needed for networks that are not one of the paper's
+    named specs (the snapshot records the name + event geometry, like
+    :func:`load`).  Pass ``compiled`` to migrate onto a prepared replica
+    instead of rebuilding: it must be compiled for the identical target
+    and carry byte-identical weights, or ``ValueError`` — a snapshot's
+    session state is meaningless on any other deployment.
+    """
+    info = read_snapshot_meta(path, step)
+    step = info["step"]
+    target = _target_from_info(info["target"])
+    per_channel = info["provenance"] == "exported"
+    sinfo = dict(info["spec"])
+    if compiled is not None:
+        spec = compiled.spec
+    if spec is None:
+        from ..snn.train import spec_for
+
+        try:
+            spec = spec_for(sinfo["name"])
+        except (ValueError, TypeError):
+            raise ValueError(
+                f"snapshot names network {sinfo['name']!r}, which is not "
+                "one of the paper's specs — pass the SNNSpec it was "
+                "compiled with: restore(path, spec=...)") from None
+        spec = dataclasses.replace(spec, input_hw=tuple(sinfo["input_hw"]),
+                                   timesteps=int(sinfo["timesteps"]))
+    if _spec_info(spec) != sinfo:
+        raise ValueError(
+            f"spec geometry {_spec_info(spec)} does not match the "
+            f"snapshot's {sinfo} — restore onto the network the snapshot "
+            "was taken on")
+    cfg = _engine_config(target)
+    like = {"layers": _layer_arrays_template(spec, per_channel),
+            "sessions": [_session_state_template(spec, s["capacity"],
+                                                 target.n_cores)
+                         for s in info["sessions"]]}
+    # host=True: the session tables carry int64/float64 accounting which
+    # must round-trip exactly (32-bit jax would truncate it).
+    tree = Checkpointer(str(path)).restore(step, like, host=True)
+    if compiled is not None:
+        if compiled.target != target:
+            raise ValueError(
+                f"snapshot was taken on {target}, but the prepared replica "
+                f"is compiled for {compiled.target} — migration is only "
+                "bit-exact onto the identical DeployTarget")
+        mine = compiled._layer_arrays()
+        for i, (a, b) in enumerate(zip(mine, tree["layers"])):
+            same = (a is None) == (b is None) and (
+                a is None or (np.array_equal(a["w_q"], b["w_q"])
+                              and np.array_equal(a["w_scale"], b["w_scale"])
+                              and np.array_equal(a["thr_int"],
+                                                 b["thr_int"])))
+            if not same:
+                raise ValueError(
+                    f"weight layer {i} of the prepared replica is not "
+                    "byte-identical to the snapshot's — a session snapshot "
+                    "only resumes on the deployment it was taken from")
+    else:
+        compiled = _compile_from_arrays(spec, target, cfg, tree["layers"],
+                                        per_channel, sinfo["name"])
+    for geo, sess_state in zip(info["sessions"], tree["sessions"]):
+        session = compiled.open_stream(geo["capacity"], geo["chunk_T"])
+        session.load_state_dict(sess_state)
+    return compiled

@@ -1,0 +1,219 @@
+"""Checkpoint robustness: corruption, truncation, versioning, atomicity.
+
+The serving tier's durability story (spidr session snapshots, the upgrade
+drill) rides entirely on ``checkpoint.Checkpointer``'s guarantees, so they
+are pinned here directly: a damaged checkpoint must raise a clean
+:class:`CheckpointError` naming the problem — never silently deploy
+corrupted state — and a crash mid-save must never corrupt the previous
+completed checkpoint.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (
+    CheckpointError,
+    Checkpointer,
+    FORMAT_VERSION,
+)
+
+
+def _tree(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(8, 4)).astype(np.float32),
+        "counts": rng.integers(0, 1000, size=(5,)).astype(np.int64),
+        "none_leaf": None,
+        "nested": {"acc": rng.random((3, 3)).astype(np.float32)},
+    }
+
+
+def _like() -> dict:
+    return {
+        "w": np.zeros((8, 4), np.float32),
+        "counts": np.zeros((5,), np.int64),
+        "none_leaf": None,
+        "nested": {"acc": np.zeros((3, 3), np.float32)},
+    }
+
+
+def _step_dir(ckpt: Checkpointer, step: int) -> str:
+    return os.path.join(ckpt.directory, f"step_{step:09d}")
+
+
+def _leaf_files(path: str) -> list:
+    return sorted(f for f in os.listdir(path) if f.endswith(".npy"))
+
+
+class TestRoundTrip:
+    def test_save_restore_is_exact(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        tree = _tree()
+        ckpt.save(3, tree)
+        out = ckpt.restore(3, _like())
+        assert np.array_equal(np.asarray(out["w"]), tree["w"])
+        assert np.array_equal(np.asarray(out["nested"]["acc"]),
+                              tree["nested"]["acc"])
+        assert out["none_leaf"] is None
+
+    def test_host_restore_preserves_wide_dtypes(self, tmp_path):
+        # int64/float64 accounting must round-trip exactly; device arrays
+        # would truncate them under 32-bit jax.
+        ckpt = Checkpointer(str(tmp_path))
+        tree = {"t": np.asarray([2**40, 7], np.int64),
+                "e": np.asarray([1.0 + 2.0**-40], np.float64)}
+        ckpt.save(0, tree)
+        out = ckpt.restore(0, {"t": np.zeros(2, np.int64),
+                               "e": np.zeros(1, np.float64)}, host=True)
+        assert out["t"].dtype == np.int64 and out["t"][0] == 2**40
+        assert out["e"].dtype == np.float64 and out["e"][0] == 1.0 + 2.0**-40
+
+    def test_save_async_then_restore(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        tree = _tree(1)
+        ckpt.save_async(5, tree)
+        ckpt.wait()
+        out = ckpt.restore(5, _like())
+        assert np.array_equal(np.asarray(out["w"]), tree["w"])
+
+    def test_manifest_records_every_leaf(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        with open(os.path.join(_step_dir(ckpt, 0), "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["format_version"] == FORMAT_VERSION
+        assert len(meta["manifest"]) == meta["n_leaves"]
+        # None leaves have no file and a null manifest entry; real leaves
+        # carry dtype/shape/crc32.
+        real = [m for m in meta["manifest"] if m is not None]
+        assert len(real) == len(_leaf_files(_step_dir(ckpt, 0)))
+        assert all({"dtype", "shape", "crc32"} <= set(m) for m in real)
+
+
+class TestCorruptionDetection:
+    def test_flipped_byte_raises_checkpoint_error(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        path = _step_dir(ckpt, 0)
+        leaf = os.path.join(path, _leaf_files(path)[0])
+        blob = bytearray(open(leaf, "rb").read())
+        blob[-1] ^= 0xFF  # flip a payload byte, header stays valid
+        open(leaf, "wb").write(bytes(blob))
+        with pytest.raises(CheckpointError, match="crc32"):
+            ckpt.restore(0, _like())
+
+    def test_truncated_leaf_raises_checkpoint_error(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        path = _step_dir(ckpt, 0)
+        leaf = os.path.join(path, _leaf_files(path)[-1])
+        blob = open(leaf, "rb").read()
+        open(leaf, "wb").write(blob[: len(blob) // 2])
+        with pytest.raises(CheckpointError):
+            ckpt.restore(0, _like())
+
+    def test_wrong_shape_leaf_raises_checkpoint_error(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        path = _step_dir(ckpt, 0)
+        leaf = os.path.join(path, _leaf_files(path)[0])
+        np.save(leaf, np.zeros((2, 2), np.float32))
+        with pytest.raises(CheckpointError, match="manifest"):
+            ckpt.restore(0, _like())
+
+    def test_newer_format_version_refused(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        meta_path = os.path.join(_step_dir(ckpt, 0), "meta.json")
+        meta = json.load(open(meta_path))
+        meta["format_version"] = 99
+        json.dump(meta, open(meta_path, "w"))
+        with pytest.raises(CheckpointError, match="format version"):
+            ckpt.restore(0, _like())
+
+    def test_garbage_meta_raises_checkpoint_error(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(0, _tree())
+        meta_path = os.path.join(_step_dir(ckpt, 0), "meta.json")
+        open(meta_path, "w").write("{not json")
+        with pytest.raises(CheckpointError, match="meta.json"):
+            ckpt.restore(0, _like())
+
+    def test_missing_step_is_file_not_found(self, tmp_path):
+        # Absence is not corruption: callers distinguish "no snapshot yet"
+        # from "snapshot damaged".
+        ckpt = Checkpointer(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(7, _like())
+
+    def test_checkpoint_error_is_a_value_error(self):
+        assert issubclass(CheckpointError, ValueError)
+
+
+class TestAtomicity:
+    def test_partial_write_is_invisible_to_latest_step(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        ckpt.save(1, _tree())
+        # A crash mid-save leaves only the .tmp staging dir behind.
+        os.makedirs(os.path.join(ckpt.directory, "step_000000002.tmp"))
+        assert ckpt.latest_step() == 1
+        out = ckpt.restore(1, _like())
+        assert np.array_equal(np.asarray(out["w"]), _tree()["w"])
+
+    def test_crash_mid_save_keeps_previous_snapshot_valid(self, tmp_path):
+        # The serving contract: a process SIGKILLed while writing snapshot
+        # k leaves snapshot k-1 complete and restorable.  Stall step 2's
+        # commit rename ("crashed before the rename") and prove step 1 is
+        # still the visible, restorable latest.
+        ckpt = Checkpointer(str(tmp_path))
+        tree = _tree()
+        ckpt.save(1, tree)
+        blocker = threading.Event()
+        release = threading.Event()
+
+        orig_rename = os.rename
+
+        def stalled_rename(src, dst):
+            if src.endswith(".tmp"):
+                blocker.set()
+                release.wait(timeout=10)
+            return orig_rename(src, dst)
+
+        os.rename = stalled_rename
+        try:
+            t = threading.Thread(
+                target=ckpt._write,
+                args=(2, [np.ones((8, 4), np.float32),
+                          np.zeros((5,), np.int64), None,
+                          np.zeros((3, 3), np.float32)], "td", {}),
+                daemon=True)
+            t.start()
+            assert blocker.wait(timeout=10)
+            assert ckpt.latest_step() == 1
+            out = ckpt.restore(1, _like())
+            assert np.array_equal(np.asarray(out["w"]), tree["w"])
+        finally:
+            release.set()
+            t.join(timeout=10)
+            os.rename = orig_rename
+        assert ckpt.latest_step() == 2  # released: the save completed
+
+    def test_rename_is_the_commit_point(self, tmp_path):
+        ckpt = Checkpointer(str(tmp_path))
+        renames = []
+        orig_rename = os.rename
+
+        def spy(src, dst):
+            renames.append((src, dst))
+            return orig_rename(src, dst)
+
+        os.rename = spy
+        try:
+            ckpt.save(4, _tree())
+        finally:
+            os.rename = orig_rename
+        assert [(s, d) for s, d in renames
+                if s.endswith(".tmp") and d.endswith("step_000000004")]

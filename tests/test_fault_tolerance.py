@@ -1,0 +1,174 @@
+"""Unit tests for ``runtime.fault_tolerance`` — previously dormant code
+that the streaming server now depends on (watchdog around every tick,
+``retrying`` rewind-and-replay), so its contracts are pinned directly.
+"""
+import time
+
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    RestartableFailure,
+    StepWatchdog,
+    StragglerDetector,
+    retrying,
+)
+
+
+class TestStepWatchdog:
+    def test_fast_step_never_fires(self):
+        wd = StepWatchdog(deadline_s=5.0)
+        wd.arm()
+        wd.disarm()
+        wd.check()  # no exception
+        assert not wd.timed_out and wd.timeouts == 0
+
+    def test_expired_deadline_fires_and_check_raises(self):
+        wd = StepWatchdog(deadline_s=0.01)
+        wd.arm()
+        time.sleep(0.1)
+        wd.disarm()
+        assert wd.timed_out and wd.timeouts == 1
+        with pytest.raises(RestartableFailure, match="deadline"):
+            wd.check()
+
+    def test_on_timeout_callback_fires(self):
+        fired = []
+        wd = StepWatchdog(deadline_s=0.01, on_timeout=lambda: fired.append(1))
+        wd.arm()
+        time.sleep(0.1)
+        wd.disarm()
+        assert fired == [1]
+
+    def test_rearm_clears_timed_out(self):
+        wd = StepWatchdog(deadline_s=0.01)
+        wd.arm()
+        time.sleep(0.1)
+        assert wd.timed_out
+        wd.arm()          # new step: flag resets, count persists
+        wd.disarm()
+        wd.check()
+        assert wd.timeouts == 1
+
+    def test_disarm_without_arm_is_a_noop(self):
+        StepWatchdog(deadline_s=1.0).disarm()
+
+
+class TestStragglerDetector:
+    def test_no_flags_before_min_steps(self):
+        det = StragglerDetector(window=16, z_thresh=1.0, min_steps=8)
+        for _ in range(7):
+            assert not det.record(1.0)
+        assert not det.record(1000.0)  # 8th sample: still warming up
+        assert det.flagged == 0
+
+    def test_outlier_is_flagged_after_warmup(self):
+        det = StragglerDetector(window=32, z_thresh=3.0, min_steps=4)
+        for _ in range(8):
+            det.record(1.0)
+        assert det.record(100.0)
+        assert det.flagged == 1
+        assert not det.record(1.0)
+
+    def test_window_evicts_old_samples(self):
+        det = StragglerDetector(window=4, z_thresh=3.0, min_steps=2)
+        for _ in range(10):
+            det.record(100.0)
+        # The ring only remembers recent (uniform) history: another 100
+        # is not a straggler relative to it.
+        assert not det.record(100.0)
+        assert len(det.times) == 4
+
+    def test_stats_reflect_recorded_times(self):
+        det = StragglerDetector(window=8, min_steps=2)
+        for s in (1.0, 2.0, 3.0):
+            det.record(s)
+        st = det.stats()
+        assert st.mean_s == pytest.approx(2.0)
+        assert st.last_s == 3.0
+        assert st.flagged == 0
+
+
+class TestRetrying:
+    def test_success_passes_through(self):
+        step = retrying(lambda x: x + 1, lambda x: None)
+        assert step(1) == 2
+        assert step.state["restarts"] == 0
+
+    def test_restartable_failure_restores_and_replays(self):
+        calls = {"step": 0, "restore": 0}
+
+        def step():
+            calls["step"] += 1
+            if calls["step"] < 3:
+                raise RestartableFailure("poisoned")
+            return "ok"
+
+        def restore():
+            calls["restore"] += 1
+
+        wrapped = retrying(step, restore, max_restarts=5)
+        assert wrapped() == "ok"
+        assert calls == {"step": 3, "restore": 2}
+        assert wrapped.state["restarts"] == 2
+
+    def test_restart_budget_is_enforced(self):
+        def always_fails():
+            raise RestartableFailure("wedged")
+
+        wrapped = retrying(always_fails, lambda: None, max_restarts=3)
+        with pytest.raises(RestartableFailure, match="wedged"):
+            wrapped()
+        # max_restarts bounds the *extra* attempts: 1 + 3 retries.
+        assert wrapped.state["restarts"] == 4
+
+    def test_budget_spans_calls(self):
+        # Crash-looping across ticks exhausts the same budget.
+        flaky = {"n": 0}
+
+        def step():
+            flaky["n"] += 1
+            if flaky["n"] % 2 == 1:
+                raise RestartableFailure("every other call")
+            return flaky["n"]
+
+        wrapped = retrying(step, lambda: None, max_restarts=2)
+        assert wrapped() == 2
+        assert wrapped() == 4
+        with pytest.raises(RestartableFailure):
+            wrapped()
+
+    def test_non_restartable_exceptions_propagate(self):
+        def step():
+            raise ValueError("not restartable")
+
+        restores = []
+        wrapped = retrying(step, lambda: restores.append(1))
+        with pytest.raises(ValueError):
+            wrapped()
+        assert restores == []  # restore_fn never invoked
+
+    def test_restore_fn_may_replace_args(self):
+        def step(state):
+            if state["poisoned"]:
+                raise RestartableFailure("bad state")
+            return state["value"]
+
+        def restore(state):
+            return ({"poisoned": False, "value": 42},)
+
+        wrapped = retrying(step, restore, max_restarts=1)
+        assert wrapped({"poisoned": True, "value": 0}) == 42
+
+    def test_restore_fn_returning_none_keeps_args(self):
+        seen = []
+
+        def step(state):
+            seen.append(state)
+            if len(seen) == 1:
+                raise RestartableFailure("once")
+            return "done"
+
+        wrapped = retrying(step, lambda state: state.clear(), max_restarts=1)
+        marker = {"k": 1}
+        assert wrapped(marker) == "done"
+        assert seen[0] is marker and seen[1] is marker  # same object retried

@@ -40,6 +40,8 @@ EXPECTED_SPIDR = {
     "VerifyReport",
     "compile",
     "load",
+    "read_snapshot_meta",
+    "restore",
 }
 
 

@@ -256,10 +256,12 @@ class TestExportCheckpointFailures:
         ckpt = Checkpointer(str(tmp_path))
         save_exported(ckpt, 1, exported)
         # Right leaf count, wrong shape/dtype: must fail validation loudly
-        # instead of deploying a silently cast/truncated tensor.
+        # instead of deploying a silently cast/truncated tensor.  The
+        # checkpoint manifest catches this before the export layer's own
+        # shape validation even runs.
         np.save(tmp_path / "step_000000001" / "0.npy",
                 np.zeros((3, 3), np.float64))
-        with pytest.raises(ValueError, match="corrupted: layer"):
+        with pytest.raises(ValueError, match="manifest|corrupted: layer"):
             load_exported(ckpt, spec)
 
     def test_load_missing_leaf_file(self, tmp_path):
