@@ -16,6 +16,14 @@ the reproduced quantity vs the paper's reported value.
   engine_zero_skip       (TPU adaptation): fused multi-timestep engine —
                          zero-skip vs dense ablation at several sparsity
                          levels, exactness vs the pure-jnp reference
+  kernel_blocksparse     (perf gate): the block-sparse Vmem-stationary
+                         hot path — T_blk-tiled fused kernels vs the
+                         per-timestep fused path vs the jnp oracle at
+                         several sparsities, recording measured wall-us
+                         NEXT TO the analytic roofline bound
+                         (``roofline.analysis.PerfModel``) so
+                         ``tools/check_bench.py --tol-roofline`` can gate
+                         the measured/bound ratio across PRs
   streaming_occupancy    (serving): chunked stateful streaming vs
                          whole-stream batch at several occupancy levels —
                          throughput, latency, and exactness of the
@@ -39,7 +47,10 @@ entry path as the launchers, examples and docs.
 ``python benchmarks/run.py`` runs everything; ``--streaming`` runs only the
 streaming-vs-whole-stream ablation; ``--qat-sweep`` only the train->deploy
 precision sweep; ``--facade-overhead`` only the facade micro-bench;
-``--smoke`` runs a reduced compiler/engine/QAT/facade subset sized for CI.  Ablations that feed the cross-PR perf trajectory also append
+``--perf`` only the block-sparse kernel perf ablation; ``--smoke`` runs a
+reduced compiler/engine/QAT/facade/kernel subset sized for CI.
+
+Ablations that feed the cross-PR perf trajectory also append
 machine-readable records to ``BENCH_compiler.json`` (``--out`` to
 relocate): one object per ablation with cycles, energy, wall time and
 sparsity — ``tools/check_bench.py`` diffs that file against the committed
@@ -354,6 +365,130 @@ def engine_zero_skip():
              f"chip_uJ={cost.energy_uj:.1f}")
         _row(f"engine_s{int(s*100)}_dense", us_dense,
              f"skip_vs_dense_wall={us_dense/max(us,1):.2f}x")
+
+
+def _clustered_events(rng, timesteps, hw, sparsity, batch=1):
+    """DVS-like clustered event frames at a target global sparsity.
+
+    Real event streams are spatially clustered — a moving edge lights a
+    patch, not i.i.d. pixels — and that clustering is what empties whole
+    (bm x bk) im2col tiles (DESIGN.md: Bernoulli sparsity at the same
+    level never empties a 128-wide tile, measured 0% skip).  Each
+    timestep actives one moving square patch at ~50% internal density,
+    sized so the frame-global sparsity hits ``sparsity``.
+    """
+    h, w = hw
+    budget = (1.0 - sparsity) * h * w * 2   # active sites per timestep
+    side = min(h, max(2, int(np.ceil(np.sqrt(budget)))))
+    density = budget / (2 * side * side)
+    ev = np.zeros((timesteps, batch) + hw + (2,), np.float32)
+    for t in range(timesteps):
+        y = (t * 7) % max(1, h - side + 1)
+        x = (t * 11) % max(1, w - side + 1)
+        for b in range(batch):
+            patch = (rng.random((side, side, 2)) < density).astype(np.float32)
+            ev[t, b, y:y + side, x:x + side] = patch
+    return ev
+
+
+def kernel_blocksparse(smoke: bool = False):
+    """Perf-gate ablation: the block-sparse Vmem-stationary hot path.
+
+    Runs the reduced gesture network through four schedules of the SAME
+    computation — the T_blk-tiled fused kernel with block skipping
+    (``t_block=T``), the same tiling dense (``skip_empty=False``), the
+    per-timestep fused kernel (``t_block=1``) and the pure-jnp oracle —
+    on clustered DVS-like event streams at several global sparsities,
+    asserting all four bit-exact.  Next to every measured wall time it
+    records the analytic roofline bound from
+    ``roofline.analysis.PerfModel`` (via ``CompiledSNN.roofline``),
+    priced with the MEASURED first-layer nonzero-tile fraction
+    (``kernels.spike_tile_bitmap`` over the im2col spike matrix).  The
+    bound is an ideal-hardware floor — interpret-mode CPU wall clock sits
+    far above it — so ``tools/check_bench.py`` gates the measured/bound
+    RATIO against the committed baseline: the bound normalizes
+    shape/sparsity/tiling out of the wall clock, and a ratio regression
+    means the implementation got slower relative to what the dataflow
+    says it should cost.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import spidr
+    from repro.configs import spidr_gesture
+    from repro.core.layers import im2col
+    from repro.core.network import init_params
+    from repro.kernels.fused_lif_gemm import spike_tile_bitmap
+
+    hw = (16, 16) if smoke else (32, 32)
+    timesteps = 4 if smoke else 6
+    spec = spidr_gesture.reduced(hw=hw, timesteps=timesteps)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    block = (128, 128, 128)
+    tblk_target = spidr.DeployTarget(
+        weight_bits=4, backend="fused", interpret=True, block=block,
+        skip_empty=True, t_block=timesteps)
+    tblk_eng = spidr.compile(spec, params, tblk_target)
+    dense_eng = spidr.compile(spec, params,
+                              dataclasses.replace(tblk_target,
+                                                  skip_empty=False))
+    pert_eng = spidr.compile(spec, params,
+                             dataclasses.replace(tblk_target, t_block=1))
+    jnp_eng = spidr.compile(spec, params,
+                            dataclasses.replace(tblk_target, backend="jnp",
+                                                t_block=1))
+    n_weight_layers = len(spec.layer_shapes())
+
+    rng = np.random.default_rng(0)
+    sparsities = (0.95,) if smoke else (0.60, 0.90, 0.95)
+    for s in sparsities:
+        ev = jnp.asarray(_clustered_events(rng, timesteps, hw, s))
+        out_tblk = tblk_eng.run(ev)
+        out_dense = dense_eng.run(ev)
+        out_pert = pert_eng.run(ev)
+        out_jnp = jnp_eng.run(ev)
+        exact = bool(
+            (np.asarray(out_tblk.readout) == np.asarray(out_dense.readout)).all()
+            and (np.asarray(out_tblk.readout) == np.asarray(out_pert.readout)).all()
+            and (np.asarray(out_tblk.readout) == np.asarray(out_jnp.readout)).all()
+            and (np.asarray(out_tblk.spike_counts)
+                 == np.asarray(out_jnp.spike_counts)).all()
+        )
+        us_tblk = _timeit(lambda: jax.block_until_ready(tblk_eng.run(ev)), n=1)
+        us_dense = _timeit(lambda: jax.block_until_ready(dense_eng.run(ev)), n=1)
+        us_pert = _timeit(lambda: jax.block_until_ready(pert_eng.run(ev)), n=1)
+        # Measured block sparsity at the input layer: the im2col spike
+        # matrix's nonzero-(bm x bk)-tile fraction, exactly what the kernel
+        # prologue computes.  Deeper layers are priced dense (their spike
+        # stacks live on-device; pricing them dense only makes the bound a
+        # firmer floor — the ratio gate tracks relative change either way).
+        cols = jnp.stack([im2col(ev[t], 3, 3, 1, 1)[0] for t in range(timesteps)])
+        frac0 = float(spike_tile_bitmap(cols.astype(jnp.int8), block).mean())
+        fracs = [frac0] + [1.0] * (n_weight_layers - 1)
+        bound_tblk = tblk_eng.roofline(batch=1, nonzero_tile_fracs=fracs)
+        bound_pert = pert_eng.roofline(batch=1, nonzero_tile_fracs=fracs)
+        pct = int(s * 100)
+        _row(f"kernel_s{pct}_tblk", us_tblk,
+             f"exact={exact} bound_us={bound_tblk['bound_us']:.1f} "
+             f"nonzero_tile_frac={frac0:.2f} "
+             f"speedup_vs_dense={us_dense / max(us_tblk, 1):.2f}x "
+             f"speedup_vs_per_t={us_pert / max(us_tblk, 1):.2f}x")
+        _row(f"kernel_s{pct}_per_t", us_pert,
+             f"bound_us={bound_pert['bound_us']:.1f}")
+        common = dict(ablation="kernel_blocksparse", sparsity=s,
+                      nonzero_tile_frac=frac0, exact=exact)
+        _record(f"kernel_s{pct}_tblk", t_block=timesteps,
+                wall_us=float(us_tblk), bound_us=float(bound_tblk["bound_us"]),
+                bytes_moved=float(bound_tblk["bytes_moved"]),
+                macs=float(bound_tblk["macs"]),
+                speedup_vs_dense=float(us_dense / max(us_tblk, 1)),
+                speedup_vs_per_t=float(us_pert / max(us_tblk, 1)), **common)
+        _record(f"kernel_s{pct}_per_t", t_block=1,
+                wall_us=float(us_pert), bound_us=float(bound_pert["bound_us"]),
+                bytes_moved=float(bound_pert["bytes_moved"]),
+                macs=float(bound_pert["macs"]), **common)
 
 
 def compiler_multicore(smoke: bool = False):
@@ -672,6 +807,7 @@ ALL = [
     fig17_sparsity_sweep,
     spike_gemm_kernel,
     engine_zero_skip,
+    kernel_blocksparse,
     streaming_occupancy,
     compiler_multicore,
     qat_sweep,
@@ -682,7 +818,8 @@ ALL = [
 # reduced shapes (a compiled-path or train->deploy regression fails this
 # job visibly).
 SMOKE = [lambda: compiler_multicore(smoke=True), lambda: qat_sweep(smoke=True),
-         lambda: facade_overhead(smoke=True)]
+         lambda: facade_overhead(smoke=True),
+         lambda: kernel_blocksparse(smoke=True)]
 
 
 def main() -> None:
@@ -694,6 +831,9 @@ def main() -> None:
     ap.add_argument("--facade-overhead", action="store_true",
                     help="run only the spidr-facade dispatch micro-bench "
                          "(asserts <1%% overhead vs direct engine calls)")
+    ap.add_argument("--perf", action="store_true",
+                    help="run only the block-sparse kernel perf ablation "
+                         "(wall-us vs roofline bound, for the CI perf gate)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized subset of the tracked ablations")
     ap.add_argument("--out", default="BENCH_compiler.json",
@@ -705,6 +845,8 @@ def main() -> None:
         fns = [lambda: qat_sweep(smoke=args.smoke)]
     elif args.facade_overhead:
         fns = [lambda: facade_overhead(smoke=args.smoke)]
+    elif args.perf:
+        fns = [lambda: kernel_blocksparse(smoke=args.smoke)]
     elif args.smoke:
         fns = SMOKE
     else:

@@ -78,7 +78,11 @@ from ..core.layers import im2col, maxpool2d
 from ..core.network import SNNSpec
 from ..core.neuron import NeuronConfig, neuron_step_int
 from ..core.quant import QuantSpec, quantize, saturate
-from ..kernels.fused_lif_gemm import DEFAULT_BLOCK, fused_lif_gemm_int
+from ..kernels.fused_lif_gemm import (
+    DEFAULT_BLOCK,
+    fused_lif_gemm_int,
+    fused_lif_gemm_int_tblk,
+)
 
 __all__ = [
     "ChunkOutput",
@@ -105,9 +109,16 @@ class EngineConfig:
     interpret: bool = False       # Pallas interpret mode (CPU)
     skip_empty: bool = True       # tile-level zero-skipping
     block: tuple = DEFAULT_BLOCK
+    # Vmem-stationary timestep tiling: >1 routes fused-backend chunks
+    # through the layer-outer T_blk path (``fused_lif_gemm_int_tblk``) —
+    # each weight block is touched once per ``t_block`` timesteps instead
+    # of once per timestep.  Bit-exact with the scan path for any value.
+    t_block: int = 1
 
     def __post_init__(self):
         assert self.backend in ("fused", "jnp"), self.backend
+        assert isinstance(self.t_block, int) and self.t_block >= 1, \
+            self.t_block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +146,9 @@ class EngineLayer:
     # Per-core slices of a per-channel ``thr_int`` (padding gets v_max+1 so
     # padded channels never spike); None when ``thr_int`` is a scalar.
     thr_cores: Optional[jax.Array] = None  # (n_cores, Kc) int32
+    # Autotuned kernel config override: (block_m, block_n, block_k, t_blk).
+    # None falls back to the engine-wide ``cfg.block`` / ``cfg.t_block``.
+    kcfg: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,15 +308,21 @@ def _cores_mesh(n_cores: int) -> Mesh:
     return Mesh(np.array(jax.devices()[:n_cores]), ("cores",))
 
 
-def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
-                      cfg: EngineConfig, device_parallel: bool):
+def _multicore_apply(el: EngineLayer, s2: jax.Array, v2: jax.Array,
+                     cfg: EngineConfig, device_parallel: bool, core_update):
     """Run one layer's per-core channel slices and reassemble the output.
 
     ``el.w_cores`` is ``(C, F, Kc)``; core ``c`` computes channels
-    ``[lo_c, hi_c)`` against the *same* ``(rows, F)`` spike matrix
-    (replicated — the engine analogue of routing the input spikes to every
-    consumer core).  Idle cores carry zero-width slices padded with zero
-    weights; their results are discarded at reassembly.
+    ``[lo_c, hi_c)`` against the *same* spike matrix (replicated — the
+    engine analogue of routing the input spikes to every consumer core).
+    Idle cores carry zero-width slices padded with zero weights; their
+    results are discarded at reassembly.
+
+    ``core_update(sp, blocks)`` runs one core's slice, ``blocks`` =
+    ``(w, [thr,] v)``, and returns a ``(v-like, s-like)`` pair whose
+    *last* axis is the channel axis — the single-timestep update returns
+    ``(rows, Kc)`` pairs, the T_blk update ``(T, rows, Kc)`` stacks; the
+    slicing/reassembly below is rank-agnostic.
     """
     n_cores, _, kc = el.w_cores.shape
 
@@ -318,12 +338,6 @@ def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
     per_core_ops = [el.w_cores]
     if el.thr_cores is not None:
         per_core_ops.append(el.thr_cores)
-
-    def core_update(sp, blocks):
-        """One core's slice: ``blocks`` = (w, [thr,] v)."""
-        w, *thr, v = blocks
-        return _fused_update(el, sp, v, cfg, w_q=w,
-                             thr=thr[0] if thr else None)
 
     if device_parallel and n_cores > 1:
         # Full (n_cores, ...) stack: shard_map needs one uniform block per
@@ -354,17 +368,30 @@ def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
 
     # Reassemble output channels in slice order (slices are contiguous and
     # cover [0, K), so concatenation restores the single-core layout).
+    # ``[..., :width]`` / ``axis=-1`` keep this correct for both the 2-D
+    # single-timestep outputs and the 3-D T_blk trajectory stacks.
     order = sorted(
         (c for c in row if el.core_slices[c][1] > el.core_slices[c][0]),
         key=lambda c: el.core_slices[c][0],
     )
     v_out = jnp.concatenate(
-        [v_next[row[c], :, : el.core_slices[c][1] - el.core_slices[c][0]]
-         for c in order], axis=1)
+        [v_next[row[c]][..., : el.core_slices[c][1] - el.core_slices[c][0]]
+         for c in order], axis=-1)
     s_out = jnp.concatenate(
-        [s[row[c], :, : el.core_slices[c][1] - el.core_slices[c][0]]
-         for c in order], axis=1)
+        [s[row[c]][..., : el.core_slices[c][1] - el.core_slices[c][0]]
+         for c in order], axis=-1)
     return v_out, s_out
+
+
+def _multicore_update(el: EngineLayer, s2: jax.Array, v2: jax.Array,
+                      cfg: EngineConfig, device_parallel: bool):
+    """Single-timestep multi-core layer update (the original path)."""
+    def core_update(sp, blocks):
+        w, *thr, v = blocks
+        return _fused_update(el, sp, v, cfg, w_q=w,
+                             thr=thr[0] if thr else None)
+
+    return _multicore_apply(el, s2, v2, cfg, device_parallel, core_update)
 
 
 def _layer_update(engine: SNNEngine, el: EngineLayer, s2: jax.Array,
@@ -373,6 +400,163 @@ def _layer_update(engine: SNNEngine, el: EngineLayer, s2: jax.Array,
         return _multicore_update(el, s2, v2, engine.cfg,
                                  engine.device_parallel)
     return _fused_update(el, s2, v2, engine.cfg)
+
+
+# ---------------------------------------------------------------------------
+# Vmem-stationary T_blk tiling: the layer-outer chunk path.  Instead of
+# scanning timesteps with a full layer sweep per step, each weight layer
+# consumes the whole chunk as (T, rows, F) spike stacks in T_blk-sized
+# slabs — one ``fused_lif_gemm_int_tblk`` call per slab touches every
+# weight block once for the slab's timesteps (the chip's Vmem-stationary
+# mode 2 reuse, Sec II-E).  Bit-exact with the scan path because integer
+# accumulation is exact and the per-slab neuron program is sequential in t.
+# ---------------------------------------------------------------------------
+def _layer_kcfg(el: EngineLayer, cfg: EngineConfig):
+    """(gemm block, t_blk) for one layer: autotuned override or config."""
+    if el.kcfg is not None:
+        bm, bn, bk, tb = el.kcfg
+        return (bm, bn, bk), tb
+    return cfg.block, cfg.t_block
+
+
+def _tblk_update(el: EngineLayer, s_slab: jax.Array, v2: jax.Array,
+                 cfg: EngineConfig, block: tuple,
+                 w_q: Optional[jax.Array] = None, thr=None):
+    """One T_blk slab: (T, rows, F) spikes -> (T, rows, K) v-traj + spikes."""
+    n = el.neuron
+    w = el.w_q if w_q is None else w_q
+    thr = el.thr_int if thr is None else thr
+    return fused_lif_gemm_int_tblk(
+        s_slab, w, v2,
+        threshold=thr,
+        leak_shift=n.leak_shift if n.model == "lif" else 0,
+        soft_reset=(n.reset == "soft"),
+        vmem_bits=cfg.qspec.vmem_bits,
+        block=block,
+        interpret=cfg.interpret,
+        skip_empty=cfg.skip_empty,
+    )
+
+
+def _layer_update_tblk(engine: SNNEngine, el: EngineLayer,
+                       s_stack: jax.Array, v2: jax.Array):
+    """Walk a (T, rows, F) spike stack through one layer in T_blk slabs.
+
+    ``chunk_T`` need not divide ``t_blk``: the remainder slab is simply a
+    second (static-shape) kernel specialization.  The Vmem carry threads
+    through the slabs, so the result is bit-exact under any slab geometry.
+    """
+    cfg = engine.cfg
+    block, tb = _layer_kcfg(el, cfg)
+    t = s_stack.shape[0]
+
+    def slab_update(slab, v_in):
+        if el.w_cores is None:
+            return _tblk_update(el, slab, v_in, cfg, block)
+
+        def core_update(sp, blocks):
+            w, *thr, v = blocks
+            return _tblk_update(el, sp, v, cfg, block, w_q=w,
+                                thr=thr[0] if thr else None)
+
+        return _multicore_apply(el, slab, v_in, cfg,
+                                engine.device_parallel, core_update)
+
+    v_parts, s_parts = [], []
+    for t0 in range(0, t, tb):
+        v_traj, s = slab_update(s_stack[t0:t0 + tb], v2)
+        v_parts.append(v_traj)
+        s_parts.append(s)
+        v2 = v_traj[-1]
+    if len(v_parts) == 1:
+        return v_parts[0], s_parts[0]
+    return jnp.concatenate(v_parts), jnp.concatenate(s_parts)
+
+
+def _tblk_active(engine: SNNEngine) -> bool:
+    """Route chunks through the layer-outer tiled path?"""
+    if engine.cfg.backend != "fused":
+        return False
+    if engine.cfg.t_block > 1:
+        return True
+    return any(el.kcfg is not None and el.kcfg[3] > 1
+               for el in engine.layers if el.kind in ("conv", "fc"))
+
+
+def _pool_stack(act: jax.Array, window: int, stride: int) -> jax.Array:
+    """maxpool2d over a (T, B, H, W, C) stack via T*B folding."""
+    t, b = act.shape[:2]
+    out = maxpool2d(act.reshape((t * b,) + act.shape[2:]),
+                    window=window, stride=stride)
+    return out.reshape((t, b) + out.shape[1:])
+
+
+def _run_chunk_tiled(engine: SNNEngine, state: EngineState,
+                     events: jax.Array, collect_counts: bool,
+                     collect_readouts: bool):
+    """Layer-outer twin of ``run_chunk``'s scan: same state, same outputs.
+
+    Memory note: this path materializes (chunk_T, ...) activation stacks
+    per layer — O(chunk_T), like ``collect_counts`` — so streams should
+    keep ``chunk_T`` at a small multiple of ``t_block`` (the scan path
+    remains the right tool for huge single-chunk runs).
+    """
+    spec = engine.spec
+    t, b = events.shape[:2]
+    act = events.astype(jnp.float32)
+    new_vmem, counts_out, counts_in = [], [], []
+    last = None  # (v_traj, s_stack) of the last weight layer
+    for el, v in zip(engine.layers, state.vmem):
+        if el.kind == "conv":
+            counts_in.append(jnp.sum(act != 0, axis=(2, 3, 4)))
+            flat = act.reshape((t * b,) + act.shape[2:])
+            cols = im2col(flat, el.kh, el.kw, el.stride, el.padding)
+            p, f = cols.shape[1], cols.shape[2]
+            k = el.w_q.shape[1]
+            s_stack = cols.reshape(t, b * p, f).astype(jnp.int8)
+            v_traj, s = _layer_update_tblk(engine, el, s_stack,
+                                           v.reshape(b * p, k))
+            v_traj = v_traj.reshape((t,) + v.shape)
+            s = s.reshape((t,) + v.shape)
+            new_vmem.append(v_traj[-1])
+            counts_out.append(jnp.sum(s, axis=(2, 3, 4)))
+            act, last = s.astype(jnp.float32), (v_traj, s)
+        elif el.kind == "fc":
+            flat = act.reshape(t, b, -1)
+            counts_in.append(jnp.sum(flat != 0, axis=2))
+            v_traj, s = _layer_update_tblk(engine, el,
+                                           flat.astype(jnp.int8), v)
+            new_vmem.append(v_traj[-1])
+            counts_out.append(jnp.sum(s, axis=2))
+            act, last = s.astype(jnp.float32), (v_traj, s)
+        elif el.kind == "pool":
+            act = _pool_stack(act, 2, 2)
+            new_vmem.append(None)
+        elif el.kind == "adaptive_pool":
+            kk = act.shape[2] // el.target_hw
+            act = _pool_stack(act, kk, kk)
+            new_vmem.append(None)
+    v_traj, s_last = last
+    if spec.readout == "rate":
+        accs = state.readout_acc[None] + jnp.cumsum(s_last, axis=0)
+    else:
+        accs = v_traj
+    slot_out = jnp.stack(counts_out, axis=1)   # (chunk_T, L, B)
+    slot_in = jnp.stack(counts_in, axis=1)
+    new_state = EngineState(
+        vmem=tuple(new_vmem),
+        readout_acc=accs[-1],
+        out_counts=state.out_counts + jnp.sum(slot_out, axis=0),
+        in_counts=state.in_counts + jnp.sum(slot_in, axis=0),
+    )
+    return new_state, ChunkOutput(
+        readout=accs[-1],
+        spike_counts=jnp.sum(slot_out, axis=2) if collect_counts else None,
+        input_counts=jnp.sum(slot_in, axis=2) if collect_counts else None,
+        slot_spike_counts=slot_out if collect_counts else None,
+        slot_input_counts=slot_in if collect_counts else None,
+        readouts=accs if collect_readouts else None,
+    )
 
 
 def compile_engine(engine: SNNEngine, schedule: CoreSchedule,
@@ -550,6 +734,9 @@ def run_chunk(
     """
     assert events.ndim == 5, "expected (chunk_T, B, H, W, C)"
     spec = engine.spec
+    if _tblk_active(engine):
+        return _run_chunk_tiled(engine, state, events,
+                                collect_counts, collect_readouts)
 
     def step(carry, x_t):
         vmem, acc, oc, ic = carry

@@ -33,6 +33,13 @@ from jax.experimental import pallas as pl
 
 __all__ = ["spike_gemm", "DEFAULT_BLOCK"]
 
+# Skip-decision strategies for the empty-tile test:
+#   "reduce" — in-kernel ``jnp.any`` over the loaded spike tile (original);
+#   "bitmap" — host-prologue per-tile bitmap operand (no load-then-test:
+#              the flag is one int32 read, and the same bitmap feeds the
+#              roofline PerfModel's MACs-at-sparsity term).
+SKIP_MODES = ("reduce", "bitmap")
+
 DEFAULT_BLOCK = (128, 128, 128)  # (bm, bn, bk)
 
 
@@ -59,16 +66,46 @@ def _spike_gemm_kernel(s_ref, w_ref, o_ref, *, n_k: int):
     del n_k
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "skip_empty"))
+def _spike_gemm_bitmap_kernel(s_ref, w_ref, bm_ref, o_ref, *, n_k: int):
+    """Skip decision from a host-computed per-tile bitmap operand."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(bm_ref[0, 0] != 0)
+    def _accumulate():
+        o_ref[...] += jax.lax.dot_general(
+            s_ref[...].astype(jnp.int32),
+            w_ref[...].astype(jnp.int32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    del n_k
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "interpret", "skip_empty", "skip_mode"),
+)
 def spike_gemm(
     spikes: jax.Array,   # (M, K) in {0,1}, any int/bool dtype
     weights: jax.Array,  # (K, N) int8
     block: tuple = DEFAULT_BLOCK,
     interpret: bool = False,
     skip_empty: bool = True,
+    skip_mode: str = "reduce",
 ) -> jax.Array:
-    """Vmem partials = spikes @ weights, int32. Pads to block multiples."""
+    """Vmem partials = spikes @ weights, int32. Pads to block multiples.
+
+    ``skip_mode`` picks how empty tiles are detected when ``skip_empty``:
+    ``"reduce"`` tests the loaded tile in-kernel, ``"bitmap"`` reads a
+    host-prologue per-tile bitmap (see ``SKIP_MODES``).  Both are bit-exact;
+    they differ only in where the skip decision is made.
+    """
     assert spikes.ndim == 2 and weights.ndim == 2
+    assert skip_mode in SKIP_MODES, (skip_mode, SKIP_MODES)
     m, k = spikes.shape
     k2, n = weights.shape
     assert k == k2, (spikes.shape, weights.shape)
@@ -79,21 +116,29 @@ def spike_gemm(
     w = jnp.pad(weights.astype(jnp.int8), ((0, pad_k), (0, pad_n)))
     gm, gn, gk = s.shape[0] // bm, w.shape[1] // bn, s.shape[1] // bk
 
-    kernel = functools.partial(_spike_gemm_kernel, n_k=gk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [s, w]
     if not skip_empty:
         kernel = functools.partial(_dense_kernel, n_k=gk)
+    elif skip_mode == "bitmap":
+        kernel = functools.partial(_spike_gemm_bitmap_kernel, n_k=gk)
+        tiles = s.reshape(gm, bm, gk, bk)
+        operands.append(jnp.any(tiles != 0, axis=(1, 3)).astype(jnp.int32))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)))
+    else:
+        kernel = functools.partial(_spike_gemm_kernel, n_k=gk)
 
     out = pl.pallas_call(
         kernel,
         grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((s.shape[0], w.shape[1]), jnp.int32),
         interpret=interpret,
-    )(s, w)
+    )(*operands)
     return out[:m, :n]
 
 

@@ -100,7 +100,38 @@ def _engine_config(target: DeployTarget) -> EngineConfig:
         interpret=bool(interpret),
         skip_empty=target.skip_empty,
         block=tuple(target.block),
+        t_block=target.t_block,
     )
+
+
+def _autotune_engine(base: SNNEngine, spec: SNNSpec, target: DeployTarget,
+                     cfg: EngineConfig) -> SNNEngine:
+    """Bake measured per-layer kernel configs into ``base``.
+
+    Consults :func:`repro.kernels.autotune.autotune_layer` per weight
+    layer (cached by shape+precision, optionally persisted via
+    ``$SPIDR_AUTOTUNE_CACHE``) and attaches the winner as
+    ``EngineLayer.kcfg``.  Every candidate is bit-exact, so tuning
+    changes wall time only, never results.
+    """
+    from ..kernels.autotune import autotune_layer
+
+    shapes = iter(spec.layer_shapes())
+    new_layers = []
+    for el in base.layers:
+        if el.kind not in ("conv", "fc"):
+            new_layers.append(el)
+            continue
+        sh = next(shapes)
+        rows = sh.out_positions if el.kind == "conv" else 1
+        winner = autotune_layer(
+            rows, sh.fan_in, sh.out_channels,
+            target.weight_bits, target.vmem_bits,
+            timesteps=min(spec.timesteps, 8),
+            sparsity=target.assumed_sparsity,
+            interpret=cfg.interpret, skip_empty=cfg.skip_empty)
+        new_layers.append(dataclasses.replace(el, kcfg=winner.kcfg))
+    return dataclasses.replace(base, layers=tuple(new_layers))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,6 +350,30 @@ class CompiledSNN:
             return estimate_multicore_cost(self.spec, self.schedule, counts)
         return estimate_cost(self.spec, self.target.qspec, counts)
 
+    # -- performance model -------------------------------------------------
+    def roofline(self, batch: int = 1, timesteps: Optional[int] = None,
+                 nonzero_tile_fracs=None) -> dict:
+        """Predicted wall-time bound for one chunk on this deployment.
+
+        Prices the compiled engine's actual tiling (per-layer autotuned
+        ``kcfg`` when present, else the target's ``block``/``t_block``)
+        through :class:`repro.roofline.PerfModel`: bytes-moved + MACs-at-
+        sparsity per weight layer, ``bound_us`` = summed max(compute,
+        memory) bound.  ``nonzero_tile_fracs`` is a per-weight-layer list
+        of nonzero spike-tile fractions (measure with
+        ``kernels.spike_tile_bitmap``); default prices dense spikes.
+        """
+        from ..roofline.analysis import PerfModel
+
+        kcfgs = [el.kcfg for el in self._base_engine.layers
+                 if el.kind in ("conv", "fc")]
+        cfg = self._base_engine.cfg
+        return PerfModel().network_bound(
+            self.spec, batch=batch, timesteps=timesteps,
+            t_block=cfg.t_block, block=cfg.block,
+            nonzero_tile_fracs=nonzero_tile_fracs,
+            layer_kcfgs=kcfgs)
+
     # -- persistence -------------------------------------------------------
     def save(self, path, step: int = 0) -> None:
         """Persist the deployment's integer artifact under ``path``.
@@ -519,6 +574,8 @@ def compile(network, params=None, target: Optional[DeployTarget] = None,
             "core.network.gesture_net/optical_flow_net (or a config's "
             "reduced()), or an exported network with snn.train + "
             "snn.export")
+    if target.autotune and cfg.backend == "fused":
+        base = _autotune_engine(base, spec, target, cfg)
     engine = _apply_schedule(base, spec, target, cfg)
     return CompiledSNN(spec=spec, target=target, engine=engine,
                        base_engine=base, exported=exported, params=params)
@@ -706,6 +763,8 @@ def _compile_from_arrays(spec: SNNSpec, target: DeployTarget,
                 layers.append(EngineLayer(kind="adaptive_pool",
                                           target_hw=layer.target_hw))
         base = SNNEngine(spec=spec, cfg=cfg, layers=tuple(layers))
+    if target.autotune and cfg.backend == "fused":
+        base = _autotune_engine(base, spec, target, cfg)
     engine = _apply_schedule(base, spec, target, cfg)
     return CompiledSNN(spec=spec, target=target, engine=engine,
                        base_engine=base, exported=exported)

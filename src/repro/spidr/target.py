@@ -70,7 +70,10 @@ class DeployTarget:
         bit-exact oracle) or ``"reference"`` (unjitted python-loop oracle —
         slow, for verification).  ``interpret`` (None = auto: on unless the
         host is a TPU), ``skip_empty`` and ``block`` configure the fused
-        kernels.
+        kernels; ``t_block`` > 1 switches them to the Vmem-stationary
+        multi-timestep tiling and ``autotune=True`` measures the fastest
+        per-layer (block, T_blk) at compile time and caches it by
+        shape+precision (``repro.kernels.autotune``).
 
     Streaming
         ``stream_capacity`` slots of persistent Vmem and ``chunk_T``
@@ -88,6 +91,13 @@ class DeployTarget:
     interpret: Optional[bool] = None     # None -> auto (on unless on TPU)
     skip_empty: bool = True
     block: tuple = DEFAULT_BLOCK
+    # Vmem-stationary timestep tiling: >1 runs fused chunks layer-outer in
+    # T_blk-sized slabs (each weight block read once per slab, not once per
+    # timestep).  Bit-exact with t_block=1 for any value.
+    t_block: int = 1
+    # Measure-and-cache the fastest (block_m, block_n, block_k, T_blk) per
+    # weight layer at compile time (kernels.autotune); fused backend only.
+    autotune: bool = False
     # Multi-core compiler knobs.
     device_parallel: Optional[bool] = None
     force_mode: Optional[int] = None     # pin operating mode 1 | 2
@@ -119,6 +129,15 @@ class DeployTarget:
         _require_positive_int(
             "stream_capacity", self.stream_capacity,
             hint="concurrent persistent-Vmem stream slots")
+        _require_positive_int(
+            "t_block", self.t_block,
+            hint="timesteps per Vmem-stationary kernel slab; 1 disables "
+            "tiling")
+        if self.autotune and self.backend != "fused":
+            raise ValueError(
+                f"autotune=True tunes the fused Pallas kernels but "
+                f"backend={self.backend!r} never runs them — deploy with "
+                "backend='fused' (or drop autotune)")
         if self.force_mode is not None and self.force_mode not in (1, 2):
             raise ValueError(
                 f"force_mode={self.force_mode!r} unsupported — the macro "

@@ -1,0 +1,483 @@
+"""Differential harness for the block-sparse Vmem-stationary hot path.
+
+The T_blk fused kernel (``fused_lif_gemm_int_tblk``) re-schedules the
+engine's hot loop three ways at once — whole-tile spike skipping from a
+host-computed bitmap, multi-timestep Vmem-stationary tiling, and autotuned
+block shapes — and every one of those levers must be *invisible* in the
+output: integer accumulation is exact, so any divergence from the
+sequential per-timestep oracle is a bug, not noise.
+
+This module is the oracle sweep:
+
+  * a parametrized differential matrix over pinned shapes (including every
+    non-divisible-by-block edge we have hit), all three precision pairs
+    (4/7, 6/11, 8/15), sparsities {0.0, 0.5, 0.95, 1.0}, scalar and
+    per-neuron thresholds, hard and soft reset, leak shifts, and
+    saturation-boundary inputs pinned at the +-Vmem clip;
+  * failures name the FIRST divergent (timestep, row, col) with both
+    values — a schedule bug localizes to a tile boundary instantly;
+  * a hypothesis-driven random-shape sweep (nightly: the ``slow`` marker)
+    that searches the shape space the pinned matrix cannot cover;
+  * chunking x tiling: ``run_chunk`` with chunk_T that is NOT a multiple
+    of T_blk, and stream snapshot/restore round-trips taken mid-tile;
+  * the autotuner's cache contract (``autotune`` marker for the sweep).
+
+Everything runs the kernels in interpret mode (CPU container); on TPU the
+same code compiles to Mosaic.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st
+
+from repro import spidr
+from repro.core.layers import SpikingConvParams, SpikingDenseParams
+from repro.core.network import SNNLayer, SNNSpec, init_params
+from repro.core.neuron import NeuronConfig
+from repro.core.quant import QuantSpec
+from repro.engine import (
+    EngineConfig,
+    build_engine,
+    init_state,
+    run_chunk,
+    run_engine,
+)
+from repro.kernels import ref
+from repro.kernels.autotune import (
+    KernelConfig,
+    _default_candidates,
+    autotune_layer,
+    cache_key,
+    clear_cache,
+    load_cache,
+    save_cache,
+)
+from repro.kernels.fused_lif_gemm import (
+    fused_lif_gemm_int,
+    fused_lif_gemm_int_tblk,
+    spike_tile_bitmap,
+)
+from repro.spidr.target import PRECISION_PAIRS
+
+# Small blocks so test-sized shapes still produce multi-tile grids (the
+# schedule bugs this harness hunts live on tile boundaries).
+BLOCK = (32, 32, 32)
+
+# Pinned regression shapes: every (T, M, K, N) that exercises a distinct
+# padding/masking edge of the (bm, bn, bk) = (32, 32, 32) tiling.
+PINNED_SHAPES = [
+    (1, 1, 1, 1),        # degenerate minimum: everything is padding
+    (5, 7, 33, 19),      # no dimension divides its block
+    (3, 65, 96, 70),     # m and n overrun one tile, k exact
+    (4, 32, 32, 32),     # exactly one tile — no masking at all
+    (6, 9, 5, 33),       # n overruns the tile by one lane
+    (2, 130, 30, 4),     # tall-skinny: 5 m-tiles, sub-tile k and n
+]
+
+SPARSITIES = (0.0, 0.5, 0.95, 1.0)
+
+
+def _case(T, M, K, N, vmem_bits, sparsity, seed=0, weight_bits=None,
+          v0_mode="random"):
+    """Random inputs for one differential case (deterministic by seed)."""
+    rng = np.random.default_rng(seed)
+    wb = weight_bits or (vmem_bits + 1) // 2
+    w_max = (1 << (wb - 1)) - 1
+    v_max = (1 << (vmem_bits - 1)) - 1
+    spikes = jnp.asarray(
+        (rng.random((T, M, K)) >= sparsity).astype(np.int8))
+    weights = jnp.asarray(
+        rng.integers(-w_max - 1, w_max + 1, (K, N)), jnp.int8)
+    if v0_mode == "random":
+        v0 = jnp.asarray(
+            rng.integers(-v_max - 1, v_max + 1, (M, N)), jnp.int32)
+    else:  # saturation boundary: start pinned at the clip rails
+        rail = v_max if v0_mode == "high" else -v_max - 1
+        v0 = jnp.full((M, N), rail, jnp.int32)
+    return spikes, weights, v0
+
+
+def _oracle(spikes, weights, v0, threshold, leak_shift, soft_reset,
+            vmem_bits):
+    """Sequential per-timestep oracle: ``ref.fused_lif_gemm_int_ref``."""
+    v = jnp.asarray(v0, jnp.int32)
+    vs, ss = [], []
+    for t in range(spikes.shape[0]):
+        v, s = ref.fused_lif_gemm_int_ref(
+            spikes[t], weights, v, threshold, leak_shift, soft_reset,
+            vmem_bits)
+        vs.append(v)
+        ss.append(s)
+    return jnp.stack(vs), jnp.stack(ss)
+
+
+def _assert_traj_equal(got, want, what):
+    """Bit-exact or name the FIRST divergent (timestep, row, col)."""
+    g, w = np.asarray(got), np.asarray(want)
+    assert g.shape == w.shape, f"{what}: shape {g.shape} != {w.shape}"
+    if (g == w).all():
+        return
+    t, r, c = np.argwhere(g != w)[0]
+    raise AssertionError(
+        f"{what} diverges first at (timestep={t}, row={r}, col={c}): "
+        f"got {g[t, r, c]}, want {w[t, r, c]} "
+        f"[{int((g != w).sum())} of {g.size} entries differ]")
+
+
+def _run_and_compare(spikes, weights, v0, threshold, *, vmem_bits,
+                     leak_shift=0, soft_reset=False, skip_empty=True,
+                     block=BLOCK):
+    v_traj, s_traj = fused_lif_gemm_int_tblk(
+        spikes, weights, v0, threshold=threshold, leak_shift=leak_shift,
+        soft_reset=soft_reset, vmem_bits=vmem_bits, block=block,
+        interpret=True, skip_empty=skip_empty)
+    want_v, want_s = _oracle(spikes, weights, v0, threshold, leak_shift,
+                             soft_reset, vmem_bits)
+    _assert_traj_equal(s_traj, want_s, "spike trajectory")
+    _assert_traj_equal(v_traj, want_v, "Vmem trajectory")
+
+
+# ---------------------------------------------------------------------------
+# The differential matrix (tier-1).
+# ---------------------------------------------------------------------------
+class TestDifferentialMatrix:
+    @pytest.mark.parametrize("wb,vb", PRECISION_PAIRS)
+    @pytest.mark.parametrize("sparsity", SPARSITIES)
+    def test_precision_pairs_at_every_sparsity(self, wb, vb, sparsity):
+        """All three silicon precision pairs on a nothing-divides shape."""
+        spikes, weights, v0 = _case(5, 7, 33, 19, vb, sparsity,
+                                    seed=wb, weight_bits=wb)
+        thr = max(1, 1 << (vb - 3))
+        _run_and_compare(spikes, weights, v0, thr, vmem_bits=vb,
+                         leak_shift=2, soft_reset=(wb == 6))
+
+    @pytest.mark.parametrize("shape", PINNED_SHAPES)
+    def test_pinned_nondivisible_shapes(self, shape):
+        """Regression pins for the padding/masking bug class: shapes whose
+        every dimension sits off a tile boundary must not read or write
+        padding lanes."""
+        T, M, K, N = shape
+        spikes, weights, v0 = _case(T, M, K, N, 7, 0.5, seed=sum(shape))
+        _run_and_compare(spikes, weights, v0, 16, vmem_bits=7,
+                         leak_shift=3, soft_reset=(T % 2 == 0))
+
+    @pytest.mark.parametrize("v0_mode", ["high", "low"])
+    @pytest.mark.parametrize("soft_reset", [False, True])
+    def test_saturation_boundary(self, v0_mode, soft_reset):
+        """Vmem pinned at the clip rails: accumulate straight into (and
+        past) saturation in both directions; the kernel's single-clip
+        order must match the oracle exactly."""
+        rng = np.random.default_rng(7)
+        vb, wb = 7, 4
+        w_max = (1 << (wb - 1)) - 1
+        spikes = jnp.asarray((rng.random((4, 33, 40)) < 0.8).astype(np.int8))
+        # Extreme same-sign weights force the accumulator over the rail.
+        sign = 1 if v0_mode == "high" else -1
+        weights = jnp.full((40, 21), sign * w_max, jnp.int8)
+        _, _, v0 = _case(4, 33, 40, 21, vb, 0.5, v0_mode=v0_mode,
+                         weight_bits=wb)
+        _run_and_compare(spikes, weights, v0, 16, vmem_bits=vb,
+                         soft_reset=soft_reset)
+
+    def test_vector_threshold(self):
+        """Per-neuron thresholds route through the vector kernel variant."""
+        spikes, weights, v0 = _case(3, 40, 17, 50, 11, 0.5, seed=11)
+        rng = np.random.default_rng(5)
+        thr = jnp.asarray(rng.integers(1, 1 << 9, (50,)), jnp.int32)
+        v_traj, s_traj = fused_lif_gemm_int_tblk(
+            spikes, weights, v0, threshold=thr, vmem_bits=11, block=BLOCK,
+            interpret=True)
+        want_v, want_s = _oracle(spikes, weights, v0, thr, 0, False, 11)
+        _assert_traj_equal(s_traj, want_s, "spike trajectory")
+        _assert_traj_equal(v_traj, want_v, "Vmem trajectory")
+
+    def test_skip_and_dense_agree(self):
+        """Block skipping must be invisible (C3: exactness)."""
+        spikes, weights, v0 = _case(4, 70, 65, 33, 7, 0.97, seed=3)
+        args = dict(threshold=16, vmem_bits=7, block=BLOCK, interpret=True)
+        a = fused_lif_gemm_int_tblk(spikes, weights, v0, skip_empty=True,
+                                    **args)
+        b = fused_lif_gemm_int_tblk(spikes, weights, v0, skip_empty=False,
+                                    **args)
+        _assert_traj_equal(a[0], b[0], "Vmem trajectory (skip vs dense)")
+        _assert_traj_equal(a[1], b[1], "spike trajectory (skip vs dense)")
+
+    def test_all_zero_input_skips_every_tile(self):
+        """sparsity=1.0: the bitmap is all zero, every tile is skipped, and
+        the output is still exactly the oracle's (leak-only dynamics)."""
+        spikes, weights, v0 = _case(4, 40, 33, 20, 7, 1.0, seed=9)
+        assert int(spike_tile_bitmap(spikes, BLOCK).sum()) == 0
+        _run_and_compare(spikes, weights, v0, 8, vmem_bits=7, leak_shift=1)
+
+    def test_tblk_equals_per_timestep_kernel(self):
+        """The T_blk schedule == T independent per-timestep kernel calls
+        (the second, independently-implemented oracle)."""
+        spikes, weights, v0 = _case(6, 65, 40, 33, 7, 0.8, seed=13)
+        v_traj, s_traj = fused_lif_gemm_int_tblk(
+            spikes, weights, v0, threshold=16, vmem_bits=7, block=BLOCK,
+            interpret=True)
+        v = v0
+        for t in range(6):
+            v, s = fused_lif_gemm_int(spikes[t], weights, v, threshold=16,
+                                      vmem_bits=7, block=BLOCK,
+                                      interpret=True)
+            _assert_traj_equal(s_traj[t][None], s[None],
+                               f"spikes (per-t kernel, t={t})")
+            _assert_traj_equal(v_traj[t][None], v[None],
+                               f"Vmem (per-t kernel, t={t})")
+
+
+class TestBitmapFormat:
+    def test_shape_and_dtype(self):
+        s = jnp.zeros((3, 100, 70), jnp.int8)
+        bm = spike_tile_bitmap(s, BLOCK)
+        assert bm.shape == (3, 4, 3)  # ceil(100/32) x ceil(70/32)
+        assert bm.dtype == jnp.int32
+        assert int(bm.sum()) == 0
+
+    def test_single_spike_lights_exactly_one_tile(self):
+        s = np.zeros((2, 100, 70), np.int8)
+        s[1, 99, 69] = 1  # last row/col: lives in the padded edge tile
+        bm = np.asarray(spike_tile_bitmap(jnp.asarray(s), BLOCK))
+        assert bm.sum() == 1 and bm[1, 3, 2] == 1
+
+    def test_2d_input_is_one_timestep(self):
+        s = np.zeros((40, 40), np.int8)
+        s[0, 0] = 1
+        bm = np.asarray(spike_tile_bitmap(jnp.asarray(s), BLOCK))
+        assert bm.shape == (2, 2) and bm[0, 0] == 1 and bm.sum() == 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep (nightly: random shapes the pinned matrix cannot cover).
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestHypothesisSweep:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        T=st.integers(1, 6),
+        M=st.integers(1, 140),
+        K=st.integers(1, 140),
+        N=st.integers(1, 70),
+        pair=st.sampled_from(PRECISION_PAIRS),
+        sparsity=st.sampled_from(SPARSITIES),
+        leak_shift=st.integers(0, 3),
+        soft_reset=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_random_shapes(self, T, M, K, N, pair, sparsity, leak_shift,
+                           soft_reset, seed):
+        wb, vb = pair
+        spikes, weights, v0 = _case(T, M, K, N, vb, sparsity, seed=seed,
+                                    weight_bits=wb)
+        thr = max(1, 1 << (vb - 3))
+        _run_and_compare(spikes, weights, v0, thr, vmem_bits=vb,
+                         leak_shift=leak_shift, soft_reset=soft_reset)
+
+
+# ---------------------------------------------------------------------------
+# Chunking x tiling: chunk_T need not respect T_blk.
+# ---------------------------------------------------------------------------
+def _mini_spec(hw=(16, 16), timesteps=6):
+    n = NeuronConfig(model="lif", reset="soft", threshold=0.5, leak_shift=3)
+    return SNNSpec(
+        name="mini", input_hw=hw, in_channels=2, timesteps=timesteps,
+        layers=(
+            SNNLayer("conv", 2, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("pool"),
+            SNNLayer("conv", 8, 8, conv=SpikingConvParams(3, 3, 1, 1, n)),
+            SNNLayer("adaptive_pool", target_hw=2),
+            SNNLayer("fc", 32, 5, fc=SpikingDenseParams(n)),
+        ),
+        readout="rate",
+    )
+
+
+def _tiled_engine(spec, t_block, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), spec)
+    cfg = EngineConfig(QuantSpec(4), interpret=True, block=(64, 64, 64),
+                       backend="fused", t_block=t_block)
+    return build_engine(spec, params, cfg)
+
+
+def _jnp_engine(spec, seed=0):
+    params = init_params(jax.random.PRNGKey(seed), spec)
+    return build_engine(spec, params,
+                        EngineConfig(QuantSpec(4), backend="jnp"))
+
+
+def _events(spec, batch=2, seed=0, sparsity=0.9):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.random((spec.timesteps, batch) + spec.input_hw + (2,))
+         > sparsity).astype(np.float32))
+
+
+class TestChunkingTimesTiling:
+    @pytest.mark.parametrize("chunk_T", [1, 3, 6])
+    def test_chunking_not_multiple_of_tblk(self, chunk_T):
+        """chunk_T in {1, 3, T} with T_blk=4: every chunk boundary falls
+        mid-tile somewhere, and the remainder-slab specialization must
+        carry Vmem exactly."""
+        spec = _mini_spec()
+        eng = _tiled_engine(spec, t_block=4)
+        ev = _events(spec)
+        whole = run_engine(_jnp_engine(spec), ev)
+        state = init_state(eng, ev.shape[1])
+        out = None
+        for t0 in range(0, spec.timesteps, chunk_T):
+            state, out = run_chunk(eng, state, ev[t0:t0 + chunk_T])
+        np.testing.assert_array_equal(np.asarray(out.readout),
+                                      np.asarray(whole.readout))
+        np.testing.assert_array_equal(
+            np.asarray(state.out_counts).sum(axis=1),
+            np.asarray(whole.spike_counts).sum(axis=0))
+
+    @pytest.mark.parametrize("t_block", [2, 3, 5, 7])
+    def test_tblk_values_including_nondivisors(self, t_block):
+        """T_blk in {2, 3, 5, 7} over T=6: non-divisors and T_blk > T both
+        reduce to remainder slabs — all bit-equal to the jnp oracle."""
+        spec = _mini_spec()
+        eng = _tiled_engine(spec, t_block=t_block)
+        ev = _events(spec, seed=t_block)
+        got = run_engine(eng, ev)
+        want = run_engine(_jnp_engine(spec), ev)
+        np.testing.assert_array_equal(np.asarray(got.readout),
+                                      np.asarray(want.readout))
+        np.testing.assert_array_equal(np.asarray(got.spike_counts),
+                                      np.asarray(want.spike_counts))
+
+    def test_stream_snapshot_restore_mid_tile(self):
+        """A session snapshot taken at a tick where delivered timesteps are
+        NOT a multiple of T_blk (chunk_T=3, T_blk=2) must restore into a
+        twin that replays the remaining chunks bit-exactly."""
+        spec = _mini_spec()
+        params = init_params(jax.random.PRNGKey(0), spec)
+        target = spidr.DeployTarget(weight_bits=4, backend="fused",
+                                    interpret=True, block=(64, 64, 64),
+                                    t_block=2, chunk_T=3, stream_capacity=2)
+        compiled = spidr.compile(spec, params, target)
+        sess = compiled.open_stream(2, 3)
+        s0 = sess.open()
+        rng = np.random.default_rng(4)
+
+        def chunk():
+            return (rng.random((3,) + spec.input_hw + (2,)) < 0.1) \
+                .astype(np.float32)
+
+        sess.step({s0: chunk()})          # 3 delivered: mid-tile for T_blk=2
+        snap = sess.state_dict()
+        later = [chunk() for _ in range(2)]
+        want = [sess.step({s0: c})[s0] for c in later]
+        twin = compiled.open_stream(2, 3)
+        twin.load_state_dict(snap)
+        got = [twin.step({s0: c})[s0] for c in later]
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g.readout),
+                                          np.asarray(w.readout))
+            assert g.spikes == w.spikes and g.timesteps == w.timesteps
+
+
+# ---------------------------------------------------------------------------
+# Autotuner cache contract.
+# ---------------------------------------------------------------------------
+TINY_CANDIDATES = [KernelConfig(32, 32, 32, 1), KernelConfig(32, 32, 32, 2)]
+
+
+class TestAutotuneCache:
+    def setup_method(self):
+        clear_cache()
+
+    def teardown_method(self):
+        clear_cache()
+
+    def test_cache_key_separates_shape_and_precision(self):
+        a = cache_key(64, 18, 16, 4, 7)
+        assert a == "r64_f18_c16_w4_v7"
+        assert a != cache_key(64, 18, 16, 6, 11)
+        assert a != cache_key(65, 18, 16, 4, 7)
+
+    def test_winner_is_cached_and_persisted(self, tmp_path):
+        path = tmp_path / "tune.json"
+        win = autotune_layer(8, 8, 8, 4, 7, timesteps=2,
+                             candidates=TINY_CANDIDATES, cache_path=path)
+        assert win in TINY_CANDIDATES
+        # Second call must hit the in-memory cache (same object back).
+        assert autotune_layer(8, 8, 8, 4, 7, timesteps=2,
+                              candidates=TINY_CANDIDATES,
+                              cache_path=path) is win
+        # And the disk cache reloads it in a cold process (simulated).
+        data = json.loads(path.read_text())
+        assert data[cache_key(8, 8, 8, 4, 7)] == list(win.kcfg)
+        clear_cache()
+        loaded = load_cache(path)
+        assert loaded[cache_key(8, 8, 8, 4, 7)] == win
+
+    def test_save_load_roundtrip(self, tmp_path):
+        path = tmp_path / "cache.json"
+        clear_cache()
+        autotune_layer(4, 4, 4, 4, 7, timesteps=1,
+                       candidates=[KernelConfig(32, 32, 32, 1)])
+        save_cache(path)
+        clear_cache()
+        loaded = load_cache(path)
+        assert loaded[cache_key(4, 4, 4, 4, 7)] == KernelConfig(32, 32, 32, 1)
+
+    def test_candidate_space_clips_to_shape(self):
+        cands = _default_candidates(8, 8, 8, timesteps=4)
+        # Small dims keep only the 32-blocks; t_blk sweeps {1, 2, 4}.
+        assert {c.block for c in cands} == {(32, 32, 32)}
+        assert {c.t_block for c in cands} == {1, 2, 4}
+        big = _default_candidates(1024, 144, 32, timesteps=8)
+        assert (128, 32, 128) in {c.block for c in big}
+
+    @pytest.mark.autotune
+    def test_every_default_candidate_is_bitexact(self):
+        """The tuner only chooses among equivalent schedules: every default
+        candidate for a conv-like shape produces the oracle's output."""
+        T, M, K, N = 4, 70, 33, 20
+        spikes, weights, v0 = _case(T, M, K, N, 7, 0.9, seed=21)
+        want_v, want_s = _oracle(spikes, weights, v0, 16, 0, False, 7)
+        for cand in _default_candidates(M, K, N, T):
+            v_parts, s_parts, v = [], [], v0
+            for t0 in range(0, T, cand.t_block):
+                v_traj, s = fused_lif_gemm_int_tblk(
+                    spikes[t0:t0 + cand.t_block], weights, v, threshold=16,
+                    vmem_bits=7, block=cand.block, interpret=True)
+                v = v_traj[-1]
+                v_parts.append(v_traj)
+                s_parts.append(s)
+            _assert_traj_equal(jnp.concatenate(s_parts), want_s,
+                               f"spikes under {cand}")
+            _assert_traj_equal(jnp.concatenate(v_parts), want_v,
+                               f"Vmem under {cand}")
+
+    @pytest.mark.autotune
+    def test_autotuned_facade_is_bitexact(self):
+        """DeployTarget(autotune=True) bakes per-layer kcfgs and the result
+        still bit-matches the jnp oracle."""
+        clear_cache()
+        spec = _mini_spec(hw=(8, 8), timesteps=4)
+        params = init_params(jax.random.PRNGKey(1), spec)
+        tuned = spidr.compile(
+            spec, params,
+            spidr.DeployTarget(weight_bits=4, backend="fused",
+                               interpret=True, autotune=True))
+        oracle = spidr.compile(spec, params,
+                               spidr.DeployTarget(backend="jnp"))
+        kcfgs = [el.kcfg for el in tuned.engine.layers
+                 if el.kind in ("conv", "fc")]
+        assert all(k is not None for k in kcfgs)
+        ev = _events(spec, batch=1, seed=2)
+        got, want = tuned.run(ev), oracle.run(ev)
+        np.testing.assert_array_equal(np.asarray(got.readout),
+                                      np.asarray(want.readout))
+        np.testing.assert_array_equal(np.asarray(got.spike_counts),
+                                      np.asarray(want.spike_counts))

@@ -380,6 +380,79 @@ class TestCheckBench:
                          extra=["--subset"]) == 0
         assert self._run(cb, tmp_path, BASE_RECORDS[:1]) == 1
 
+    # -- the wall_us/bound_us roofline-ratio gate ---------------------------
+    # BASE_RECORDS stay bound_us-free on purpose: test_wall_time_ignored
+    # above pins the contract that wall_us ALONE is never gated.  The ratio
+    # gate engages only for records whose baseline commits both fields.
+    ROOFLINE_RECORDS = [
+        {"name": "kernel_s95_tblk", "wall_us": 1000.0, "bound_us": 10.0,
+         "exact": True, "sparsity": 0.95},
+        {"name": "kernel_s95_per_t", "wall_us": 1500.0, "bound_us": 12.0,
+         "exact": True, "sparsity": 0.95},
+    ]
+
+    def _run_vs(self, cb, tmp_path, base_records, fresh_records, extra=()):
+        base = tmp_path / "baseline.json"
+        fresh = tmp_path / "fresh.json"
+        _write_bench(base, base_records)
+        _write_bench(fresh, fresh_records)
+        return cb.main([str(fresh), "--baseline", str(base), *extra])
+
+    def test_roofline_identical_passes(self, cb, tmp_path):
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS,
+                            self.ROOFLINE_RECORDS) == 0
+
+    def test_roofline_ratio_regression_fails(self, cb, tmp_path, capsys):
+        fresh = [dict(r) for r in self.ROOFLINE_RECORDS]
+        fresh[0]["wall_us"] = 5000.0  # ratio 100 -> 500 > 4x limit
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh) == 1
+        out = capsys.readouterr().out
+        assert "wall/roofline ratio regressed" in out
+        assert "refresh" in out.lower()
+
+    def test_roofline_tolerance_edges(self, cb, tmp_path):
+        # Exactly AT the limit (ratio x (1 + tol)) passes; just past fails.
+        fresh = [dict(r) for r in self.ROOFLINE_RECORDS]
+        fresh[0]["wall_us"] = 4000.0  # ratio 400 == 100 * (1 + 3.0)
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh) == 0
+        fresh[0]["wall_us"] = 4100.0
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh) == 1
+
+    def test_roofline_tolerance_is_configurable(self, cb, tmp_path):
+        fresh = [dict(r) for r in self.ROOFLINE_RECORDS]
+        fresh[0]["wall_us"] = 5000.0
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh,
+                            extra=["--tol-roofline", "9.0"]) == 0
+
+    def test_roofline_improvement_passes(self, cb, tmp_path):
+        # A faster kernel OR a tighter bound both shrink the ratio: pass.
+        fresh = [dict(r) for r in self.ROOFLINE_RECORDS]
+        fresh[0]["wall_us"] = 200.0
+        fresh[1]["bound_us"] = 50.0
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh) == 0
+
+    def test_missing_bound_key_fails(self, cb, tmp_path, capsys):
+        # bound_us vanishing from the fresh run means the ablation stopped
+        # pricing its roofline — the field-disappeared path reports it.
+        fresh = [dict(r) for r in self.ROOFLINE_RECORDS]
+        del fresh[0]["bound_us"]
+        assert self._run_vs(cb, tmp_path, self.ROOFLINE_RECORDS, fresh) == 1
+        assert "'bound_us' disappeared" in capsys.readouterr().out
+
+    def test_bound_appearing_fresh_is_not_gated(self, cb, tmp_path):
+        # Baseline without bound_us keeps the wall_us-ignored contract even
+        # when the fresh run starts reporting a bound.
+        base = [{"name": "kernel_s95_tblk", "wall_us": 10.0, "exact": True}]
+        fresh = [{"name": "kernel_s95_tblk", "wall_us": 999999.0,
+                  "bound_us": 1.0, "exact": True}]
+        assert self._run_vs(cb, tmp_path, base, fresh) == 0
+
+    def test_roofline_subset_mode(self, cb, tmp_path):
+        # The CI perf-gate job runs --perf --smoke: kernel records only.
+        assert self._run_vs(cb, tmp_path,
+                            BASE_RECORDS + self.ROOFLINE_RECORDS,
+                            self.ROOFLINE_RECORDS, extra=["--subset"]) == 0
+
     def test_committed_baseline_is_current(self):
         """The committed baseline must carry the QAT sweep records the CI
         gate relies on, all bit-exact."""
@@ -391,6 +464,13 @@ class TestCheckBench:
             assert f"qat_gesture_{bits}b_1core" in names
             assert f"qat_gesture_{bits}b_4core" in names
         assert all(r.get("exact", True) for r in base["results"])
+        # The perf gate needs committed measured-vs-bound ratios for the
+        # block-sparse kernel ablation.
+        by_name = {r["name"]: r for r in base["results"]}
+        for rec in ("kernel_s95_tblk", "kernel_s95_per_t"):
+            assert rec in names
+            assert by_name[rec]["wall_us"] > 0
+            assert by_name[rec]["bound_us"] > 0
 
 
 @pytest.mark.slow

@@ -11,7 +11,18 @@ compares a freshly generated file against the committed
     contract, no tolerance);
   * ``cycles`` / ``energy_uj`` grow beyond ``--tol`` (relative);
   * the deployed quality metric regresses beyond ``--tol-metric``
-    (absolute) — ``accuracy`` falling or ``aee`` rising.
+    (absolute) — ``accuracy`` falling or ``aee`` rising;
+  * the measured/roofline ratio ``wall_us / bound_us`` grows beyond
+    ``--tol-roofline`` (relative) — only for records whose BASELINE
+    carries both fields.  Raw ``wall_us`` stays ungated (CI runners are
+    not comparable machines); the analytic bound from
+    ``roofline.analysis.PerfModel`` normalizes shape/sparsity/tiling out
+    of the wall clock, so the ratio moves only when the implementation
+    gets slower relative to what its dataflow should cost.  The default
+    tolerance is deliberately loose (3.0 = 4x the committed ratio):
+    interpret-mode wall clock jitters across runners, and the gate exists
+    to catch order-of-magnitude schedule regressions (a dropped
+    block-skip, a retraced jit, a T_blk tiling that stopped engaging).
 
 Improvements (fewer cycles, less energy, better metric) always pass, with
 a note suggesting a baseline refresh so the gate tightens over time.
@@ -55,9 +66,29 @@ def _load(path: pathlib.Path) -> dict:
     return {r["name"]: r for r in records}
 
 
-def _check_record(base: dict, fresh: dict, tol: float, tol_metric: float):
+def _check_record(base: dict, fresh: dict, tol: float, tol_metric: float,
+                  tol_roofline: float = 3.0):
     """Yield failure strings for one record pair."""
     name = base["name"]
+    # Roofline-ratio gate: applies only when the BASELINE committed both a
+    # measured wall time and a predicted bound (records without bound_us
+    # keep the long-standing contract that wall_us alone is ignored).
+    if "wall_us" in base and "bound_us" in base:
+        if "wall_us" in fresh and "bound_us" in fresh:
+            base_ratio = base["wall_us"] / max(base["bound_us"], 1e-12)
+            got_ratio = fresh["wall_us"] / max(fresh["bound_us"], 1e-12)
+            limit = base_ratio * (1.0 + tol_roofline)
+            if got_ratio > limit:
+                yield (
+                    f"{name}: wall/roofline ratio regressed "
+                    f"{base_ratio:.1f} -> {got_ratio:.1f} "
+                    f"(+{(got_ratio / max(base_ratio, 1e-12) - 1) * 100:.0f}%, "
+                    f"tolerance {tol_roofline * 100:.0f}%) — measured "
+                    f"{fresh['wall_us']:.0f}us vs predicted bound "
+                    f"{fresh['bound_us']:.1f}us"
+                )
+        # A missing wall_us/bound_us falls through to the field-disappeared
+        # check below, which reports it.
     for field, value in base.items():
         if field not in fresh:
             yield f"{name}: field '{field}' disappeared from the fresh run"
@@ -109,6 +140,14 @@ def main(argv=None) -> int:
         help="absolute tolerance for accuracy/AEE regressions (default 0.05)",
     )
     ap.add_argument(
+        "--tol-roofline",
+        type=float,
+        default=3.0,
+        help="relative tolerance for the wall_us/bound_us roofline ratio "
+        "(default 3.0; applies only to records whose baseline has both "
+        "fields)",
+    )
+    ap.add_argument(
         "--subset",
         action="store_true",
         help="the fresh file covers only part of the baseline (e.g. a "
@@ -135,7 +174,8 @@ def main(argv=None) -> int:
                 "removed or renamed?)"
             )
             continue
-        errs = list(_check_record(record, fresh[name], args.tol, args.tol_metric))
+        errs = list(_check_record(record, fresh[name], args.tol,
+                                  args.tol_metric, args.tol_roofline))
         failures.extend(errs)
         if not errs:
             for field, lower_better in COST_FIELDS.items():
