@@ -158,6 +158,12 @@ class MulticoreCost:
     routing_energy_uj: float
     mean_sparsity: float
     pipeline_states: list                # per-core resume points (streaming)
+    # Optional per-(layer, core) busy-cycle breakdown for the Chrome-trace
+    # exporter (repro.obs.timeline): list of {layer, name, core, cycles}
+    # records where ``cycles[t]`` is exactly what that layer contributed to
+    # this core's ``compute`` matrix at timestep t.  None unless the run
+    # was priced with ``collect_timeline=True``.
+    timeline: list | None = None
 
     @property
     def busy_cycles(self) -> np.ndarray:
@@ -175,6 +181,7 @@ def estimate_multicore_cost(
     hw: HW = HW(),
     n_cm: int = 9,
     pipeline_states: list | None = None,
+    collect_timeline: bool = False,
 ) -> MulticoreCost:
     """Price one multi-core engine run, attributing cycles/energy per core.
 
@@ -188,6 +195,11 @@ def estimate_multicore_cost(
     For streams priced chunk by chunk, thread ``pipeline_states`` (the
     previous chunk's ``cost.pipeline_states``) exactly like the single-core
     ``estimate_cost`` — per-core makespans stay chunking-invariant.
+
+    ``collect_timeline=True`` additionally records the per-(layer, core)
+    busy cycles of every timestep — exactly the values accumulated into
+    the ``compute`` matrix, so the Chrome-trace exporter in
+    ``repro.obs.timeline`` conserves ``busy_cycles`` cycle for cycle.
     """
     counts = np.asarray(input_counts, dtype=np.float64)
     T, n_layers = counts.shape
@@ -200,6 +212,9 @@ def estimate_multicore_cost(
     routed_spikes = 0.0
     single_total = 0
     passes_per_core = np.zeros(C, dtype=np.float64)
+    # (layer index, core) -> per-timestep busy cycles, filled only when the
+    # caller asked for the Chrome-trace breakdown.
+    lane_cycles: dict = {}
 
     for li, ls in enumerate(schedule.layers):
         m = ls.plan.mapping
@@ -209,10 +224,17 @@ def estimate_multicore_cost(
         for s in ls.slices:
             ct = _slice_channel_tiles(s.width, m.parallel_channels)
             per_macro = 2.0 * counts[:, li] * ct / active
-            compute[s.core, :, :active] += (
-                np.ceil(per_macro)[:, None].astype(np.int64))
+            per_macro_cycles = np.ceil(per_macro).astype(np.int64)
+            compute[s.core, :, :active] += per_macro_cycles[:, None]
             passes_per_core[s.core] += (
                 ct * m.position_tiles * m.fan_in_tiles)
+            if collect_timeline:
+                # Total contribution to this core's compute matrix per
+                # timestep: the per-macro ceil lands on ``active`` macros.
+                key = (li, int(s.core))
+                lane = lane_cycles.setdefault(
+                    key, np.zeros(T, dtype=np.int64))
+                lane += per_macro_cycles * active
         # Routing truth lives on the schedule (LayerSchedule.route_fractions,
         # computed once at compile time): charge each consumer core for the
         # share of the input plane it receives over the fabric.
@@ -262,6 +284,18 @@ def estimate_multicore_cost(
     # the >= 1.0 invariant rather than reporting a meaningless 0.
     imbalance = float(busy.max() / busy.mean()) if busy.sum() else 1.0
     makespans = np.array([pc.makespan_cycles for pc in per_core])
+    timeline = None
+    if collect_timeline:
+        timeline = [
+            {
+                "layer": li,
+                "name": f"L{schedule.layers[li].node}:"
+                        f"{schedule.layers[li].kind}",
+                "core": core,
+                "cycles": [int(v) for v in lane],
+            }
+            for (li, core), lane in sorted(lane_cycles.items())
+        ]
     return MulticoreCost(
         per_core=per_core,
         makespan_cycles=int((makespans + routing).max()),
@@ -274,4 +308,5 @@ def estimate_multicore_cost(
         routing_energy_uj=float(routing_energy_uj),
         mean_sparsity=sparsity,
         pipeline_states=new_states,
+        timeline=timeline,
     )

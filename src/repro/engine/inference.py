@@ -83,6 +83,7 @@ from ..kernels.fused_lif_gemm import (
     fused_lif_gemm_int,
     fused_lif_gemm_int_tblk,
 )
+from ..obs import trace as obs_trace
 
 __all__ = [
     "ChunkOutput",
@@ -221,6 +222,13 @@ class ChunkOutput:
 
 def build_engine(spec: SNNSpec, params, cfg: EngineConfig) -> SNNEngine:
     """Quantize float params into the integer engine (per-tensor scales)."""
+    with obs_trace.default_tracer().span("engine.build", cat="compile",
+                                         network=spec.name,
+                                         backend=cfg.backend):
+        return _build_engine(spec, params, cfg)
+
+
+def _build_engine(spec: SNNSpec, params, cfg: EngineConfig) -> SNNEngine:
     layers = []
     for layer, p in zip(spec.layers, params):
         if layer.kind == "conv":
@@ -573,6 +581,15 @@ def compile_engine(engine: SNNEngine, schedule: CoreSchedule,
     mesh axis when the host has at least ``n_cores`` devices, lockstep
     ``vmap`` emulation otherwise.
     """
+    with obs_trace.default_tracer().span("engine.compile_schedule",
+                                         cat="compile",
+                                         network=engine.spec.name,
+                                         n_cores=schedule.n_cores):
+        return _compile_engine(engine, schedule, device_parallel)
+
+
+def _compile_engine(engine: SNNEngine, schedule: CoreSchedule,
+                    device_parallel: Optional[bool] = None) -> SNNEngine:
     assert engine.schedule is None, "engine already carries a schedule"
     for ls in schedule.layers:
         if ls.plan.spec != engine.cfg.qspec:

@@ -52,6 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.pipeline import PipelineState
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .cost import estimate_cost, estimate_multicore_cost
 from .inference import SNNEngine, init_state, reset_slot, run_chunk
 
@@ -79,6 +81,11 @@ class SlotUpdate:
     # imbalance (max/mean busy) of its placement.  None/0 on single core.
     per_core_cycles: Optional[np.ndarray] = None
     load_imbalance: float = 0.0
+    # This chunk's (t, n_layers) input-spike counts — populated only when
+    # the manager was built with ``collect_chunk_counts=True`` (used by
+    # ``launch/serve.py --trace-out`` to re-price finished streams with
+    # ``collect_timeline=True`` for the per-stream pipeline timeline).
+    input_counts: Optional[np.ndarray] = None
 
 
 class StreamSessionManager:
@@ -98,13 +105,31 @@ class StreamSessionManager:
     """
 
     def __init__(self, engine: SNNEngine, capacity: int = 4,
-                 chunk_T: int = 2):
+                 chunk_T: int = 2, *, metrics=None, tracer=None,
+                 collect_chunk_counts: bool = False):
         assert capacity >= 1 and chunk_T >= 1
         self.engine = engine
         self.capacity = capacity
         self.chunk_T = chunk_T
         spec = engine.spec
         self._frame_shape = tuple(spec.input_hw) + (spec.in_channels,)
+        # Telemetry (repro.obs).  ``None`` binds the process-wide defaults
+        # (disabled unless ``obs.enable_metrics()``/``enable_tracing()`` is
+        # called — enabling is retroactive since the objects are shared);
+        # ``False`` pins telemetry hard-off for this session regardless of
+        # the globals.  Every record site is guarded by one truthiness
+        # check, so the disabled path stays within the <1% dispatch budget
+        # gated by the ``telemetry_overhead`` benchmark.
+        self._metrics = (obs_metrics.default_registry() if metrics is None
+                         else (metrics or obs_metrics.MetricsRegistry(False)))
+        self._tracer = (obs_trace.default_tracer() if tracer is None
+                        else (tracer or obs_trace.Tracer(enabled=False)))
+        self._collect_chunk_counts = bool(collect_chunk_counts)
+        self._m = None  # lazily bound metric handles (first enabled tick)
+        # Position-weighted input-plane size per timestep — the sparsity
+        # denominator, identical to the cost model's definition.
+        self._positions_per_t = float(
+            sum(s.fan_in * s.out_positions for s in spec.layer_shapes()))
         self.state = init_state(engine, capacity)
         self.active = [False] * capacity
         self.ended = [False] * capacity   # delivered a short (final) chunk
@@ -167,6 +192,75 @@ class StreamSessionManager:
     def occupancy(self) -> int:
         return sum(self.active)
 
+    # -- telemetry ---------------------------------------------------------
+    def _metric_handles(self):
+        """Bind (and cache) the session's metric objects on first use."""
+        if self._m is None:
+            reg = self._metrics
+            self._m = {
+                "ticks": reg.counter(
+                    "spidr_session_ticks_total", "Session step() calls"),
+                "timesteps": reg.counter(
+                    "spidr_stream_timesteps_total",
+                    "Timesteps consumed across all streams"),
+                "in_spikes": reg.counter(
+                    "spidr_stream_input_spikes_total",
+                    "Layer-input spikes across all streams"),
+                "out_spikes": reg.counter(
+                    "spidr_stream_output_spikes_total",
+                    "Layer-output spikes across all streams"),
+                "cycles": reg.counter(
+                    "spidr_stream_cycles_total",
+                    "Async-pipeline makespan cycle increments"),
+                "energy": reg.counter(
+                    "spidr_stream_energy_uj_total",
+                    "Calibrated energy across all streams (uJ)"),
+                "occupancy": reg.gauge(
+                    "spidr_session_occupancy",
+                    "Open slots at the last tick"),
+                "sparsity": reg.histogram(
+                    "spidr_chunk_sparsity",
+                    "Per-slot per-chunk input sparsity",
+                    edges=obs_metrics.FRACTION_BUCKETS),
+                "tile_frac": reg.histogram(
+                    "spidr_chunk_nonzero_tile_frac",
+                    "Per-slot per-chunk nonzero event-tile fraction "
+                    "(zero-skip opportunity)",
+                    edges=obs_metrics.FRACTION_BUCKETS),
+                "slot_cycles": [reg.gauge(
+                    "spidr_slot_cycles",
+                    "Cumulative makespan cycles of the stream in each slot",
+                    labels={"slot": i}) for i in range(self.capacity)],
+                "slot_energy": [reg.gauge(
+                    "spidr_slot_energy_uj",
+                    "Cumulative energy of the stream in each slot (uJ)",
+                    labels={"slot": i}) for i in range(self.capacity)],
+                "slot_imbalance": [reg.gauge(
+                    "spidr_slot_load_imbalance",
+                    "Per-slot multi-core load imbalance (max/mean busy)",
+                    labels={"slot": i}) for i in range(self.capacity)],
+            }
+        return self._m
+
+    def _nonzero_tile_frac(self, chunk: np.ndarray) -> float:
+        """Fraction of ``block_k``-wide event tiles holding any spike.
+
+        The engine's zero-skip kernels drop all-zero GEMM tiles; this is
+        the host-side view of how much of the input plane they get to
+        skip, tiled along the flattened (H*W*C) axis with the engine's
+        ``block_k``.
+        """
+        t = chunk.shape[0]
+        flat = chunk.reshape(t, -1)
+        bk = int(self.engine.cfg.block[2])
+        k = flat.shape[1]
+        n_tiles = -(-k // bk)
+        pad = n_tiles * bk - k
+        if pad:
+            flat = np.pad(flat, ((0, 0), (0, pad)))
+        nz = (flat.reshape(t, n_tiles, bk) != 0).any(axis=2)
+        return float(nz.sum() / nz.size)
+
     # -- the batched tick --------------------------------------------------
     def step(self, chunks: Dict[int, np.ndarray]) -> Dict[int, SlotUpdate]:
         """Advance every slot by ``chunk_T`` timesteps in one fused call."""
@@ -194,7 +288,22 @@ class StreamSessionManager:
             ev[:t, slot] = chunk
             valid[slot] = t
 
-        self.state, out = self._step(self.state, jnp.asarray(ev))
+        # Telemetry pre-capture: cumulative counters only ever accumulate
+        # *deltas*, so totals are chunking-invariant (tested).
+        telemetry = bool(self._metrics)
+        if telemetry:
+            prev_cycles = self.slot_cycles.copy()
+            prev_energy = self.slot_energy_uj.copy()
+
+        if self._tracer:
+            with self._tracer.span("run_chunk", cat="session",
+                                   tick=self.ticks, slots=len(valid)):
+                self.state, out = self._step(self.state, jnp.asarray(ev))
+                # Sync inside the span so it measures the device step, not
+                # just async dispatch (we host-transfer right below anyway).
+                out = jax.block_until_ready(out)
+        else:
+            self.state, out = self._step(self.state, jnp.asarray(ev))
         self.ticks += 1
 
         readouts = np.asarray(out.readouts)          # (chunk_T, capacity, ...)
@@ -249,8 +358,39 @@ class StreamSessionManager:
                 spikes=int(self.slot_spikes[slot]),
                 per_core_cycles=per_core_cycles,
                 load_imbalance=imbalance,
+                input_counts=(counts.copy()
+                              if self._collect_chunk_counts else None),
             )
+        if telemetry:
+            self._record_tick(chunks, valid, slot_in, updates,
+                              prev_cycles, prev_energy)
         return updates
+
+    def _record_tick(self, chunks, valid, slot_in, updates,
+                     prev_cycles, prev_energy) -> None:
+        """Fold one tick into the metrics registry (enabled path only)."""
+        m = self._metric_handles()
+        m["ticks"].inc()
+        m["occupancy"].set(self.occupancy)
+        for slot, t in valid.items():
+            up = updates[slot]
+            in_spikes = float(slot_in[:t, :, slot].sum())
+            m["timesteps"].inc(t)
+            m["in_spikes"].inc(in_spikes)
+            m["out_spikes"].inc(up.chunk_spikes)
+            # Cumulative makespan is monotone per stream; exporting the
+            # per-tick *increment* keeps the counter chunking-invariant.
+            m["cycles"].inc(float(self.slot_cycles[slot] - prev_cycles[slot]))
+            m["energy"].inc(
+                float(self.slot_energy_uj[slot] - prev_energy[slot]))
+            density = in_spikes / (self._positions_per_t * t)
+            m["sparsity"].observe(float(np.clip(1.0 - density, 0.0, 1.0)))
+            m["tile_frac"].observe(
+                self._nonzero_tile_frac(np.asarray(chunks[slot])))
+            m["slot_cycles"][slot].set(float(self.slot_cycles[slot]))
+            m["slot_energy"][slot].set(float(self.slot_energy_uj[slot]))
+            if self._schedule is not None:
+                m["slot_imbalance"][slot].set(float(self.slot_imbalance[slot]))
 
     # -- durability: serializable session state ----------------------------
     @property

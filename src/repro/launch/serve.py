@@ -44,11 +44,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.models import model as M
 from repro.models.transformer import init_decode_state
+from repro.obs.logs import request_context
 
-logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+# Structured logging (repro.obs.logs): ``main()`` calls
+# ``obs.logging_setup(json_mode=args.log_json)`` — every record carries the
+# current stream's request id (``rid=...`` in text mode, ``"request_id"``
+# in --log-json mode) via a contextvar, replacing the old module-level
+# ``logging.basicConfig``.
 log = logging.getLogger("repro.serve")
 
 
@@ -179,6 +185,10 @@ class SNNRequest:
     first_reply_at: Optional[float] = None
     cycles: int = 0
     energy_uj: float = 0.0
+    # Concatenated per-chunk input-spike counts (T_so_far, n_layers) —
+    # populated only when the server collects chunk counts for the
+    # per-stream pipeline-timeline export (``--trace-out`` on multi-core).
+    input_counts: Optional[np.ndarray] = None
 
 
 class SNNServer:
@@ -196,6 +206,7 @@ class SNNServer:
         self.done: list = []
         self.total_input_counts = None
         self.batches = 0
+        self._metrics = obs.default_registry()
 
     def submit(self, req: SNNRequest):
         req.submitted_at = time.monotonic()
@@ -204,6 +215,7 @@ class SNNServer:
     def step(self) -> bool:
         if not self.waiting:
             return False
+        t0 = time.monotonic()
         batch = self.waiting[: self.capacity]
         self.waiting = self.waiting[self.capacity:]
         ev = np.zeros(
@@ -225,6 +237,16 @@ class SNNServer:
             else self.total_input_counts + counts
         )
         self.batches += 1
+        if self._metrics:
+            reg = self._metrics
+            reg.counter("spidr_serve_batches_total",
+                        "Whole-stream batches served").inc()
+            reg.histogram("spidr_serve_batch_seconds",
+                          "Whole-stream batch wall latency",
+                          edges=obs.metrics.LATENCY_BUCKETS_S
+                          ).observe(time.monotonic() - t0)
+            reg.gauge("spidr_serve_queue_depth",
+                      "Requests waiting for a slot").set(len(self.waiting))
         return True
 
 
@@ -257,13 +279,15 @@ class StreamingSNNServer:
     def __init__(self, compiled, capacity: int = 4, chunk_T: int = 2, *,
                  watchdog_s: Optional[float] = None, max_restarts: int = 3,
                  snapshot_dir: Optional[str] = None, snapshot_every: int = 0,
-                 fail_at_tick: Optional[int] = None, _session=None):
+                 fail_at_tick: Optional[int] = None, _session=None,
+                 collect_chunk_counts: bool = False):
         from repro.runtime.fault_tolerance import StepWatchdog, retrying
 
         self.compiled = compiled
         self.sessions = (_session if _session is not None
-                         else compiled.open_stream(capacity=capacity,
-                                                   chunk_T=chunk_T))
+                         else compiled.open_stream(
+                             capacity=capacity, chunk_T=chunk_T,
+                             collect_chunk_counts=collect_chunk_counts))
         self.chunk_T = chunk_T
         self.waiting: list = []
         self.done: list = []
@@ -271,18 +295,34 @@ class StreamingSNNServer:
         self.ticks = 0
         self.snapshot_dir = snapshot_dir
         self.snapshot_every = snapshot_every
+        # Telemetry: the process-wide registry/tracer (disabled unless
+        # obs.enable_metrics()/enable_tracing() ran, e.g. via the
+        # --metrics-out/--trace-out flags).
+        self._metrics = obs.default_registry()
+        self._tracer = obs.default_tracer()
         # Fault injection for tests/drills: raise RestartableFailure once,
         # mid-tick (after the session stepped, before bookkeeping) — the
         # worst case the rewind has to undo.  ``mid_tick_hook`` is the
         # generic form (the upgrade drill SIGKILLs the process from it).
         self.fail_at_tick = fail_at_tick
         self.mid_tick_hook = None
-        self._watchdog = (StepWatchdog(watchdog_s)
-                          if watchdog_s is not None else None)
+        self._watchdog = (StepWatchdog(
+            watchdog_s,
+            counter=self._metrics.counter(
+                "spidr_serve_watchdog_timeouts_total",
+                "Watchdog deadline firings") if self._metrics else None)
+            if watchdog_s is not None else None)
         self._rewind_point = None
         self._step = retrying(self._tick, self._rewind,
-                              max_restarts=max_restarts)
+                              max_restarts=max_restarts,
+                              on_restart=self._count_rewind)
         self._mark()
+
+    def _count_rewind(self) -> None:
+        if self._metrics:
+            self._metrics.counter(
+                "spidr_serve_rewinds_total",
+                "Rewind-and-replay recoveries").inc()
 
     @property
     def restarts(self) -> int:
@@ -297,8 +337,21 @@ class StreamingSNNServer:
         while self.waiting:
             slot = self.sessions.open()
             if slot is None:
+                # Admission deferred: every waiter stays queued this tick.
+                if self._metrics:
+                    self._metrics.counter(
+                        "spidr_serve_rejections_total",
+                        "Ticks on which waiting streams found no free slot"
+                    ).inc()
                 return
-            self.slots[slot] = self.waiting.pop(0)
+            req = self.waiting.pop(0)
+            self.slots[slot] = req
+            if self._metrics:
+                self._metrics.counter(
+                    "spidr_serve_admissions_total",
+                    "Streams admitted into a session slot").inc()
+            with request_context(req.rid):
+                log.debug("admitted stream %d into slot %d", req.rid, slot)
 
     # -- fault tolerance: rewind-and-replay --------------------------------
     def _mark(self):
@@ -316,7 +369,8 @@ class StreamingSNNServer:
             "done": list(self.done),
             "ticks": self.ticks,
             "reqs": [(r, r.cursor, r.readout, r.cycles, r.energy_uj,
-                      r.first_reply_at, r.done_at) for r in reqs],
+                      r.first_reply_at, r.done_at, r.input_counts)
+                     for r in reqs],
         }
 
     def _rewind(self, *args, **kwargs):
@@ -326,9 +380,9 @@ class StreamingSNNServer:
         self.waiting = list(cp["waiting"])
         self.done = list(cp["done"])
         self.ticks = cp["ticks"]
-        for r, cur, ro, cyc, uj, fr, da in cp["reqs"]:
+        for r, cur, ro, cyc, uj, fr, da, ic in cp["reqs"]:
             r.cursor, r.readout, r.cycles, r.energy_uj = cur, ro, cyc, uj
-            r.first_reply_at, r.done_at = fr, da
+            r.first_reply_at, r.done_at, r.input_counts = fr, da, ic
         log.info("rewound to tick %d and replaying", self.ticks)
 
     def _tick(self) -> bool:
@@ -361,6 +415,10 @@ class StreamingSNNServer:
             # Incremental reply: cumulative readout + chip cost so far.
             req.readout = up.readout
             req.cycles, req.energy_uj = up.cycles, up.energy_uj
+            if up.input_counts is not None:
+                req.input_counts = (
+                    up.input_counts if req.input_counts is None
+                    else np.concatenate([req.input_counts, up.input_counts]))
             if req.first_reply_at is None:
                 req.first_reply_at = now
             if req.cursor >= req.events.shape[0]:
@@ -368,6 +426,10 @@ class StreamingSNNServer:
                 self.done.append(req)
                 self.sessions.close(slot)   # free the slot: continuous batching
                 del self.slots[slot]
+                with request_context(req.rid):
+                    log.info(
+                        "stream %d done: %d timesteps, %d cycles, %.2f uJ",
+                        req.rid, req.cursor, req.cycles, req.energy_uj)
         self.ticks += 1
         return True
 
@@ -375,7 +437,21 @@ class StreamingSNNServer:
         # Mark *now*, not after: requests submitted since the last tick are
         # part of the state a mid-tick failure must rewind to.
         self._mark()
-        alive = self._step()
+        t0 = time.monotonic()
+        if self._tracer:
+            with self._tracer.span("serve.tick", cat="serve",
+                                   tick=self.ticks):
+                alive = self._step()
+        else:
+            alive = self._step()
+        if self._metrics and alive:
+            reg = self._metrics
+            reg.histogram("spidr_serve_tick_seconds",
+                          "Streaming tick wall latency",
+                          edges=obs.metrics.LATENCY_BUCKETS_S
+                          ).observe(time.monotonic() - t0)
+            reg.gauge("spidr_serve_queue_depth",
+                      "Requests waiting for a slot").set(len(self.waiting))
         if alive and self.snapshot_dir and self.snapshot_every \
                 and self.ticks % self.snapshot_every == 0:
             self.save_snapshot()
@@ -400,6 +476,7 @@ class StreamingSNNServer:
         from the restored cursors.
         """
         assert self.snapshot_dir, "construct the server with snapshot_dir="
+        t0 = time.monotonic()
         extra = {"server": {
             "ticks": int(self.ticks),
             "slots": {str(slot): int(req.rid)
@@ -411,6 +488,13 @@ class StreamingSNNServer:
         }}
         self.compiled.snapshot(self.snapshot_dir, step=self.ticks,
                                sessions=[self.sessions], extra=extra)
+        if self._metrics:
+            self._metrics.histogram(
+                "spidr_serve_snapshot_seconds",
+                "save_snapshot wall duration (server bookkeeping + "
+                "checkpoint write)",
+                edges=obs.metrics.LATENCY_BUCKETS_S
+            ).observe(time.monotonic() - t0)
 
     @classmethod
     def restore(cls, path, requests_by_rid: dict, compiled=None, *,
@@ -466,6 +550,15 @@ def serve_snn(args):
 
     spec = (spidr_gesture.reduced() if args.snn == "gesture"
             else spidr_optflow.reduced())
+    # Telemetry opt-in must precede spidr.compile so the autotune sweep and
+    # compile spans land in the same registry/trace as the serving loop.
+    metrics_out = getattr(args, "metrics_out", None)
+    metrics_every = getattr(args, "metrics_every", 0)
+    trace_out = getattr(args, "trace_out", None)
+    if metrics_out:
+        obs.enable_metrics()
+    if trace_out:
+        obs.enable_tracing()
     params = init_params(jax.random.PRNGKey(0), spec)
     # One declarative target covers what used to be EngineConfig + the
     # compile_network/compile_engine hand-wiring: precision pair, backend
@@ -490,18 +583,25 @@ def serve_snn(args):
     ev, _ = make(jax.random.PRNGKey(1), batch=args.requests,
                  timesteps=spec.timesteps, hw=spec.input_hw)
 
+    # Per-stream pipeline timelines need per-chunk input counts, which only
+    # exist on the multi-core (scheduled) deployment.
+    want_timeline = bool(trace_out) and compiled.schedule is not None
+
     if args.streaming:
         server = StreamingSNNServer(
             compiled, capacity=args.capacity, chunk_T=args.chunk_T,
             watchdog_s=getattr(args, "watchdog_s", None),
             snapshot_dir=getattr(args, "snapshot_dir", None),
-            snapshot_every=getattr(args, "snapshot_every", 0))
+            snapshot_every=getattr(args, "snapshot_every", 0),
+            collect_chunk_counts=want_timeline)
         for r in range(args.requests):
             server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
         t0 = time.monotonic()
         ticks = 0
         while server.step():
             ticks += 1
+            if metrics_out and metrics_every and ticks % metrics_every == 0:
+                obs.default_registry().write(metrics_out)
         dt = time.monotonic() - t0
         lat = [r.done_at - r.submitted_at for r in server.done]
         ttfr = [r.first_reply_at - r.submitted_at for r in server.done]
@@ -519,6 +619,9 @@ def serve_snn(args):
             "chip estimate/stream (cumulative): %.0f cycles p50, %.1f uJ p50",
             float(np.median(cyc)), float(np.median(uj)),
         )
+        _export_telemetry(compiled, metrics_out, trace_out,
+                          [(r.rid, r.input_counts) for r in server.done]
+                          if want_timeline else [])
         return server
 
     server = SNNServer(compiled, capacity=args.capacity)
@@ -555,7 +658,34 @@ def serve_snn(args):
             cost.routing_cycles.tolist(), cost.load_imbalance,
             cost.energy_uj, cost.routing_energy_uj,
         )
+    _export_telemetry(compiled, metrics_out, trace_out,
+                      [("batch-mean", mean_counts)] if want_timeline else [])
     return server
+
+
+def _export_telemetry(compiled, metrics_out, trace_out, stream_counts):
+    """Final metrics dump + Chrome-trace export for the serving run.
+
+    ``stream_counts``: (label, per-timestep input counts) pairs — each is
+    re-priced through the multi-core pipeline model and merged into the
+    trace as its own process row (pid 100+i), so Perfetto shows the host
+    spans and every stream's per-core busy/routing/idle clocks side by
+    side.
+    """
+    if metrics_out:
+        obs.default_registry().write(metrics_out)
+        log.info("metrics written to %s", metrics_out)
+    if not trace_out:
+        return
+    extra = []
+    for i, (label, counts) in enumerate(stream_counts):
+        if counts is None:
+            continue
+        extra.extend(compiled.pipeline_trace(
+            input_counts=counts, label=f"stream {label}", pid=100 + i))
+    obs.default_tracer().export(trace_out, extra_events=extra)
+    log.info("chrome trace written to %s (%d pipeline-timeline events)",
+             trace_out, len(extra))
 
 
 def main():
@@ -595,7 +725,23 @@ def main():
                          "SpiDR cores (repro.compiler) — bit-exact outputs, "
                          "per-core cost attribution; uses a shard_map cores "
                          "mesh when the host has N devices")
+    ap.add_argument("--metrics-out", default=None, dest="metrics_out",
+                    help="enable telemetry and write the final metrics dump "
+                         "here (.json -> JSON, else Prometheus text)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    dest="metrics_every",
+                    help="--streaming: also rewrite --metrics-out every N "
+                         "ticks (0 = only at the end)")
+    ap.add_argument("--trace-out", default=None, dest="trace_out",
+                    help="enable span tracing and export a Chrome-trace/"
+                         "Perfetto JSON (compile + autotune + serving spans; "
+                         "multi-core runs add per-stream pipeline timelines)")
+    ap.add_argument("--log-json", action="store_true", dest="log_json",
+                    help="emit one JSON object per log record instead of "
+                         "text (each record carries the stream request id)")
     args = ap.parse_args()
+
+    obs.logging_setup(json_mode=args.log_json)
 
     if args.snn:
         serve_snn(args)

@@ -35,9 +35,14 @@ class RestartableFailure(RuntimeError):
 
 
 class StepWatchdog:
-    def __init__(self, deadline_s: float, on_timeout: Optional[Callable] = None):
+    def __init__(self, deadline_s: float, on_timeout: Optional[Callable] = None,
+                 counter=None):
+        """``counter``: optional ``repro.obs`` Counter (or any object with
+        ``inc()``) bumped on every firing — lets a serving loop export
+        watchdog timeouts without this module importing telemetry."""
         self.deadline_s = deadline_s
         self.on_timeout = on_timeout
+        self.counter = counter
         self._timer: Optional[threading.Timer] = None
         self.timed_out = False
         self.timeouts = 0
@@ -45,6 +50,8 @@ class StepWatchdog:
     def _fire(self):
         self.timed_out = True
         self.timeouts += 1
+        if self.counter is not None:
+            self.counter.inc()
         if self.on_timeout:
             self.on_timeout()
 
@@ -104,7 +111,8 @@ class StragglerDetector:
         )
 
 
-def retrying(step_fn, restore_fn, max_restarts: int = 3):
+def retrying(step_fn, restore_fn, max_restarts: int = 3,
+             on_restart: Optional[Callable] = None):
     """Wrap step_fn; on RestartableFailure restore state and retry.
 
     ``restore_fn`` is called with the failing call's arguments; if it
@@ -113,7 +121,9 @@ def retrying(step_fn, restore_fn, max_restarts: int = 3):
     restore_fn rewinds internal session state and retries the same tick).
     Any other exception type passes straight through: only failures
     explicitly marked restartable are retried.  ``wrapped.state``
-    exposes the cumulative restart count.
+    exposes the cumulative restart count.  ``on_restart`` (no args) is
+    invoked after each successful restore — telemetry hook for counting
+    rewinds without coupling this module to ``repro.obs``.
     """
     state = {"restarts": 0}
 
@@ -128,6 +138,8 @@ def retrying(step_fn, restore_fn, max_restarts: int = 3):
                 new_args = restore_fn(*args, **kwargs)
                 if new_args is not None:
                     args = tuple(new_args)
+                if on_restart is not None:
+                    on_restart()
 
     wrapped.state = state
     return wrapped

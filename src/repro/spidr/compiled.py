@@ -27,6 +27,7 @@ import dataclasses
 import functools
 import json
 import os
+import time
 from typing import Optional
 
 import jax
@@ -54,6 +55,9 @@ from ..engine.streaming import (
     SlotUpdate,
     StreamSessionManager,
 )
+from ..obs import metrics as obs_metrics
+from ..obs import timeline as obs_timeline
+from ..obs import trace as obs_trace
 from ..snn.export import (
     ExportedLayer,
     ExportedNetwork,
@@ -116,21 +120,47 @@ def _autotune_engine(base: SNNEngine, spec: SNNSpec, target: DeployTarget,
     """
     from ..kernels.autotune import autotune_layer
 
+    tracer = obs_trace.default_tracer()
+    reg = obs_metrics.default_registry()
+    t_sweep = time.perf_counter()
     shapes = iter(spec.layer_shapes())
     new_layers = []
-    for el in base.layers:
-        if el.kind not in ("conv", "fc"):
-            new_layers.append(el)
-            continue
-        sh = next(shapes)
-        rows = sh.out_positions if el.kind == "conv" else 1
-        winner = autotune_layer(
-            rows, sh.fan_in, sh.out_channels,
-            target.weight_bits, target.vmem_bits,
-            timesteps=min(spec.timesteps, 8),
-            sparsity=target.assumed_sparsity,
-            interpret=cfg.interpret, skip_empty=cfg.skip_empty)
-        new_layers.append(dataclasses.replace(el, kcfg=winner.kcfg))
+    with tracer.span("autotune", cat="compile", network=spec.name):
+        for li, el in enumerate(base.layers):
+            if el.kind not in ("conv", "fc"):
+                new_layers.append(el)
+                continue
+            sh = next(shapes)
+            rows = sh.out_positions if el.kind == "conv" else 1
+            with tracer.span("autotune.layer", cat="compile", layer=li,
+                             kind=el.kind, rows=rows,
+                             channels=sh.out_channels):
+                winner = autotune_layer(
+                    rows, sh.fan_in, sh.out_channels,
+                    target.weight_bits, target.vmem_bits,
+                    timesteps=min(spec.timesteps, 8),
+                    sparsity=target.assumed_sparsity,
+                    interpret=cfg.interpret, skip_empty=cfg.skip_empty)
+            if reg:
+                # Info-gauge: the chosen KernelConfig rides in the labels
+                # (value is a constant 1, Prometheus "info" idiom).
+                bm, bn, bk, tb = winner.kcfg
+                reg.gauge(
+                    "spidr_autotune_kcfg_info",
+                    "Chosen per-layer kernel config (info gauge)",
+                    labels={"network": spec.name, "layer": li,
+                            "kind": el.kind, "block_m": bm, "block_n": bn,
+                            "block_k": bk, "t_block": tb}).set(1.0)
+            new_layers.append(dataclasses.replace(el, kcfg=winner.kcfg))
+    if reg:
+        reg.counter(
+            "spidr_autotune_seconds_total",
+            "Wall seconds spent in autotune sweeps").inc(
+                time.perf_counter() - t_sweep)
+        reg.counter(
+            "spidr_autotune_layers_total",
+            "Weight layers autotuned").inc(
+                sum(1 for el in base.layers if el.kind in ("conv", "fc")))
     return dataclasses.replace(base, layers=tuple(new_layers))
 
 
@@ -166,9 +196,12 @@ class StreamSession:
     manager's diagnostics instead of corrupting state.
     """
 
-    def __init__(self, engine: SNNEngine, capacity: int, chunk_T: int):
-        self._manager = StreamSessionManager(engine, capacity=capacity,
-                                             chunk_T=chunk_T)
+    def __init__(self, engine: SNNEngine, capacity: int, chunk_T: int,
+                 collect_chunk_counts: bool = False, metrics=None,
+                 tracer=None):
+        self._manager = StreamSessionManager(
+            engine, capacity=capacity, chunk_T=chunk_T, metrics=metrics,
+            tracer=tracer, collect_chunk_counts=collect_chunk_counts)
 
     @property
     def capacity(self) -> int:
@@ -300,7 +333,9 @@ class CompiledSNN:
 
     # -- streaming ---------------------------------------------------------
     def open_stream(self, capacity: Optional[int] = None,
-                    chunk_T: Optional[int] = None) -> StreamSession:
+                    chunk_T: Optional[int] = None,
+                    collect_chunk_counts: bool = False, metrics=None,
+                    tracer=None) -> StreamSession:
         """Open a persistent-Vmem streaming session.
 
         ``capacity`` / ``chunk_T`` default to the target's
@@ -309,6 +344,17 @@ class CompiledSNN:
         stream alone, whatever shares the batch.  (A ``"reference"``
         target streams through the jitted jnp datapath — same integers,
         same spikes.)
+
+        ``collect_chunk_counts=True`` makes every ``SlotUpdate`` carry its
+        chunk's per-layer input-spike counts, so a server can re-price a
+        finished stream with ``collect_timeline=True`` and export its
+        per-core pipeline timeline (``launch/serve.py --trace-out``).
+
+        ``metrics`` / ``tracer``: session telemetry (``repro.obs``).
+        ``None`` uses the process-wide defaults (disabled unless
+        ``obs.enable_metrics()``/``enable_tracing()`` ran); pass a private
+        ``MetricsRegistry``/``Tracer`` to isolate, or ``False`` to pin
+        telemetry hard off for this session.
         """
         capacity = self.target.stream_capacity if capacity is None \
             else capacity
@@ -318,7 +364,9 @@ class CompiledSNN:
         _require_positive_int("chunk_T", chunk_T,
                               hint="timesteps delivered per streaming tick")
         session = StreamSession(self.engine, capacity=capacity,
-                                chunk_T=chunk_T)
+                                chunk_T=chunk_T, metrics=metrics,
+                                tracer=tracer,
+                                collect_chunk_counts=collect_chunk_counts)
         self._sessions.append(session)
         return session
 
@@ -338,6 +386,13 @@ class CompiledSNN:
         ``EngineCost`` (single core) or ``MulticoreCost`` (compiled plan,
         with per-core attribution and routing overhead).
         """
+        counts = self._counts_of(result, input_counts)
+        if self.schedule is not None:
+            return estimate_multicore_cost(self.spec, self.schedule, counts)
+        return estimate_cost(self.spec, self.target.qspec, counts)
+
+    @staticmethod
+    def _counts_of(result, input_counts) -> np.ndarray:
         if input_counts is None:
             if result is None or getattr(result, "input_counts", None) is None:
                 raise ValueError(
@@ -345,10 +400,49 @@ class CompiledSNN:
                     "from run() (with collect_counts on), or a raw "
                     "(T, n_weight_layers) array via input_counts=")
             input_counts = result.input_counts
-        counts = np.asarray(input_counts)
-        if self.schedule is not None:
-            return estimate_multicore_cost(self.spec, self.schedule, counts)
-        return estimate_cost(self.spec, self.target.qspec, counts)
+        return np.asarray(input_counts)
+
+    # -- telemetry ---------------------------------------------------------
+    def metrics(self, fmt: str = "prometheus"):
+        """Export the process-wide metrics registry (``repro.obs``).
+
+        ``fmt="prometheus"`` returns the text exposition format,
+        ``fmt="json"`` the JSON-friendly dict.  Empty unless metrics were
+        enabled (``obs.enable_metrics()`` or ``serve.py --metrics-out``)
+        before the instrumented paths ran.
+        """
+        reg = obs_metrics.default_registry()
+        if fmt in ("prometheus", "prom", "text"):
+            return reg.to_prometheus()
+        if fmt == "json":
+            return reg.to_dict()
+        raise ValueError(
+            f"unknown metrics format {fmt!r} — use 'prometheus' or 'json'")
+
+    def pipeline_trace(self, result=None, input_counts=None, path=None,
+                       label: str = "run", pid: int = 1) -> list:
+        """Chrome-trace pipeline timeline of a run on the compiled plan.
+
+        Prices the run's spike statistics through
+        ``estimate_multicore_cost(..., collect_timeline=True)`` and
+        renders the simulated per-core async-pipeline clocks (busy /
+        AER-routing / idle intervals, one track per core) as Chrome-trace
+        events — summed busy+routing durations equal
+        ``MulticoreCost.busy_cycles`` exactly.  Returns the event list;
+        ``path`` additionally writes a Perfetto-loadable JSON file.
+        Multi-core targets only.
+        """
+        if self.schedule is None:
+            raise ValueError(
+                "pipeline_trace() renders the multi-core pipeline clocks — "
+                "this deployment is single-core (target.n_cores == 1)")
+        counts = self._counts_of(result, input_counts)
+        cost = estimate_multicore_cost(self.spec, self.schedule, counts,
+                                       collect_timeline=True)
+        events = obs_timeline.multicore_timeline(cost, label=label, pid=pid)
+        if path is not None:
+            obs_timeline.write_chrome_trace(events, path)
+        return events
 
     # -- performance model -------------------------------------------------
     def roofline(self, batch: int = 1, timesteps: Optional[int] = None,
@@ -430,23 +524,34 @@ class CompiledSNN:
         :func:`read_snapshot_meta`.
         """
         sessions = self.sessions if sessions is None else tuple(sessions)
-        target_info = dataclasses.asdict(self.target)
-        target_info["block"] = list(target_info["block"])
-        info = {
-            "version": SNAPSHOT_VERSION,
-            "session_schema": SESSION_SCHEMA_VERSION,
-            "provenance": ("exported" if self.exported is not None
-                           else "per_tensor"),
-            "target": target_info,
-            "spec": _spec_info(self.spec),
-            "sessions": [{"capacity": s.capacity, "chunk_T": s.chunk_T}
-                         for s in sessions],
-            "extra": extra or {},
-        }
-        tree = {"layers": self._layer_arrays(),
-                "sessions": [s.state_dict() for s in sessions]}
-        Checkpointer(str(path)).save(step, tree,
-                                     extra_meta={_SNAPSHOT_META_KEY: info})
+        t0 = time.perf_counter()
+        with obs_trace.default_tracer().span(
+                "snapshot.save", cat="durability", path=str(path),
+                sessions=len(sessions)):
+            target_info = dataclasses.asdict(self.target)
+            target_info["block"] = list(target_info["block"])
+            info = {
+                "version": SNAPSHOT_VERSION,
+                "session_schema": SESSION_SCHEMA_VERSION,
+                "provenance": ("exported" if self.exported is not None
+                               else "per_tensor"),
+                "target": target_info,
+                "spec": _spec_info(self.spec),
+                "sessions": [{"capacity": s.capacity, "chunk_T": s.chunk_T}
+                             for s in sessions],
+                "extra": extra or {},
+            }
+            tree = {"layers": self._layer_arrays(),
+                    "sessions": [s.state_dict() for s in sessions]}
+            Checkpointer(str(path)).save(
+                step, tree, extra_meta={_SNAPSHOT_META_KEY: info})
+        reg = obs_metrics.default_registry()
+        if reg:
+            reg.histogram(
+                "spidr_snapshot_seconds",
+                "CompiledSNN.snapshot wall duration",
+                edges=obs_metrics.LATENCY_BUCKETS_S,
+            ).observe(time.perf_counter() - t0)
 
     # -- the proof ---------------------------------------------------------
     def verify(self, events=None, params=None, batch: int = 2,
@@ -539,6 +644,14 @@ def compile(network, params=None, target: Optional[DeployTarget] = None,
     grid — bit-exact with single-core execution.
     """
     target = target or DeployTarget()
+    with obs_trace.default_tracer().span(
+            "spidr.compile", cat="compile", backend=target.backend,
+            n_cores=target.n_cores, weight_bits=target.weight_bits):
+        return _compile(network, params, target, spec)
+
+
+def _compile(network, params, target: DeployTarget,
+             spec: Optional[SNNSpec]) -> CompiledSNN:
     cfg = _engine_config(target)
     if isinstance(network, ExportedNetwork):
         if spec is None and isinstance(params, SNNSpec):
@@ -576,7 +689,9 @@ def compile(network, params=None, target: Optional[DeployTarget] = None,
             "snn.export")
     if target.autotune and cfg.backend == "fused":
         base = _autotune_engine(base, spec, target, cfg)
-    engine = _apply_schedule(base, spec, target, cfg)
+    with obs_trace.default_tracer().span(
+            "compiler.schedule", cat="compile", n_cores=target.n_cores):
+        engine = _apply_schedule(base, spec, target, cfg)
     return CompiledSNN(spec=spec, target=target, engine=engine,
                        base_engine=base, exported=exported, params=params)
 
@@ -819,6 +934,14 @@ def restore(path, spec: Optional[SNNSpec] = None,
     and carry byte-identical weights, or ``ValueError`` — a snapshot's
     session state is meaningless on any other deployment.
     """
+    with obs_trace.default_tracer().span("snapshot.restore",
+                                         cat="durability", path=str(path)):
+        return _restore(path, spec, compiled, step)
+
+
+def _restore(path, spec: Optional[SNNSpec],
+             compiled: Optional[CompiledSNN],
+             step: Optional[int]) -> CompiledSNN:
     info = read_snapshot_meta(path, step)
     step = info["step"]
     target = _target_from_info(info["target"])

@@ -118,8 +118,15 @@ def serve_reference(cfg: dict, seed: int):
 def child_serve(cfg: dict, seed: int, snap_dir: str, die_at: int) -> None:
     """Serve with per-tick snapshots; SIGKILL ourselves mid-tick at
     ``die_at`` — after the session stepped, before bookkeeping/snapshot."""
+    from repro import obs
     from repro.launch.serve import StreamingSNNServer
 
+    # Trace the whole doomed run: compile/autotune spans plus every
+    # serve.tick/run_chunk up to the fatal tick.  The trace is exported
+    # from the mid-tick hook — synchronously, before the SIGKILL lands —
+    # so the parent can embed the kill-tick span timeline in its report.
+    obs.enable_tracing()
+    tracer = obs.default_tracer()
     compiled, _ = build(cfg)
     server = StreamingSNNServer(compiled, capacity=cfg["capacity"],
                                 chunk_T=cfg["chunk_T"],
@@ -127,6 +134,8 @@ def child_serve(cfg: dict, seed: int, snap_dir: str, die_at: int) -> None:
 
     def kill_mid_tick(tick: int) -> None:
         if tick == die_at:
+            os.makedirs(snap_dir, exist_ok=True)
+            tracer.export(os.path.join(snap_dir, "kill_trace.json"))
             os.kill(os.getpid(), signal.SIGKILL)
 
     server.mid_tick_hook = kill_mid_tick
@@ -183,6 +192,22 @@ def drill_config(cfg: dict, seed: int) -> dict:
                 f"serve child exited {a.returncode}, expected SIGKILL "
                 f"({-signal.SIGKILL}): {a.stderr[-2000:]}"))
             return record
+        trace_path = os.path.join(snap, "kill_trace.json")
+        if os.path.exists(trace_path):
+            with open(trace_path) as f:
+                spans = [e for e in json.load(f)["traceEvents"]
+                         if e.get("ph") == "X"]
+            # The span timeline leading into the kill: the last few
+            # completed spans (the fatal tick's run_chunk is the newest —
+            # its serve.tick parent never closed, the process died inside).
+            record["kill_trace"] = {
+                "total_spans": len(spans),
+                "final_spans": [
+                    {"name": e["name"], "cat": e.get("cat"),
+                     "ts_us": e["ts"], "dur_us": e["dur"],
+                     "args": e.get("args", {})}
+                    for e in spans[-8:]],
+            }
         out = os.path.join(tmp, "results.json")
         b = spawn(["--child", "restore", "--cfg", cfg_json, "--dir", snap,
                    "--seed", str(seed), "--out", out])
