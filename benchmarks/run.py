@@ -28,6 +28,11 @@ the reproduced quantity vs the paper's reported value.
                          whole-stream batch at several occupancy levels —
                          throughput, latency, and exactness of the
                          persistent-Vmem session path
+  fleet_scaling          (serving): spidr.serve fleet of 1/2/4 engine
+                         replicas under an open-loop arrival process —
+                         p50/p99 chunk latency, streams/s, shed rate,
+                         live-migration count, with every completed
+                         stream gated bit-exact vs a whole-stream run
   compiler_multicore     (compiler): single- vs 4-core compiled execution
                          at 60/90/95% input sparsity — exactness, per-core
                          cycles, routing overhead, load imbalance
@@ -876,8 +881,9 @@ def streaming_occupancy():
     Serves the reduced gesture network at several occupancy levels (how many
     of the session's slots hold live streams).  For each level: wall time and
     per-stream latency through the persistent-Vmem streaming path
-    (``StreamSessionManager`` via ``StreamingSNNServer``, chunk_T timesteps
-    per tick) vs one whole-stream ``run_engine`` call over the same streams,
+    (``StreamSessionManager`` via ``repro.serving.StreamWorker``, chunk_T
+    timesteps per tick) vs one whole-stream ``run_engine`` call over the
+    same streams,
     plus bit-exactness of the streamed readouts against the whole-stream
     result.  Uses the jnp backend so the numbers measure the serving loop,
     not the Pallas interpreter.
@@ -888,7 +894,7 @@ def streaming_occupancy():
     from repro import spidr
     from repro.configs import spidr_gesture
     from repro.core.network import init_params
-    from repro.launch.serve import SNNRequest, StreamingSNNServer
+    from repro.serving import StreamRequest, StreamWorker
     from repro.snn.data import make_gesture_batch
 
     spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
@@ -905,11 +911,11 @@ def streaming_occupancy():
         # One server per occupancy level: after a drain every slot is free
         # again, so repeated drains measure the steady-state serving loop
         # (the jitted session step compiles once, on the warm-up drain).
-        server = StreamingSNNServer(eng, capacity=capacity, chunk_T=chunk_T)
+        server = StreamWorker(eng, capacity=capacity, chunk_T=chunk_T)
 
         def drain():
             for r in range(occ):
-                server.submit(SNNRequest(rid=r, events=ev_np[:, r]))
+                server.submit(StreamRequest(rid=r, events=ev_np[:, r]))
             while server.step():
                 pass
 
@@ -932,6 +938,125 @@ def streaming_occupancy():
         )
 
 
+def fleet_scaling(smoke: bool = False, trace_out: str = None):
+    """Serving-fleet ablation: throughput/latency scaling across replicas.
+
+    Drives ``spidr.serve`` end to end: a synthetic open-loop arrival
+    process submits DVS streams into a sync-mode fleet of 1/2/4 engine
+    replicas (1024 streams in the full run, 48 in ``--smoke``) with a
+    bounded admission queue, so the run exercises scheduling, explicit
+    load shedding (``FleetOverloaded``) and at least one live cross-replica
+    migration per multi-replica point.  Reports p50/p99 per-chunk (fleet
+    tick) latency, streams/sec, shed rate and migration count, and gates
+    exactness: every completed stream's readout — including migrated and
+    re-placed ones — must match a whole-stream ``CompiledSNN.run`` of the
+    same events bit for bit.  ``trace_out`` additionally exports the
+    fleet's Chrome trace (serve.tick + fleet.migrate spans) for the CI
+    artifact.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import obs, spidr
+    from repro.configs import spidr_gesture
+    from repro.core.network import init_params
+    from repro.serving import FleetOverloaded
+    from repro.snn.data import make_gesture_batch
+
+    if trace_out:
+        obs.enable_tracing()
+
+    spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    compiled = spidr.compile(spec, params, spidr.DeployTarget(backend="jnp"))
+
+    if smoke:
+        n_streams, capacity, chunk_T = 48, 2, 3
+        burst, max_queue, replica_counts = 4, 8, (1, 2)
+    else:
+        n_streams, capacity, chunk_T = 1024, 8, 3
+        burst, max_queue, replica_counts = 6, 32, (1, 2, 4)
+
+    # A bank of distinct synthetic streams, cycled over by rid.  Stream
+    # lengths alternate between the full window and half of it (variable-
+    # length DVS streams stagger completions, so slots free up while other
+    # streams still run — the window live migration needs).  The
+    # whole-stream run of the bank at each length is the bit-exactness
+    # reference for every completed stream (migrated ones included).
+    bank = 16
+    lengths = (spec.timesteps, spec.timesteps // 2)
+    ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=bank,
+                               timesteps=spec.timesteps, hw=spec.input_hw)
+    ev_np = np.asarray(ev)
+    whole = {length: np.asarray(compiled.run(
+        jnp.asarray(ev_np[:length])).readout) for length in set(lengths)}
+
+    def _events(rid):
+        return ev_np[:lengths[rid % len(lengths)], rid % bank]
+
+    for r in replica_counts:
+        fleet = spidr.serve(compiled, spidr.ServeConfig(
+            n_replicas=r, capacity=capacity, chunk_T=chunk_T,
+            max_queue=max_queue, migrate_every=8))
+        tick_s: list = []
+        shed = 0
+        i = 0
+        t0 = time.perf_counter()
+        while True:
+            for _ in range(burst):
+                if i >= n_streams:
+                    break
+                try:
+                    fleet.submit(_events(i), rid=i)
+                except FleetOverloaded:
+                    shed += 1
+                i += 1
+            t1 = time.perf_counter()
+            alive = fleet.step()
+            tick_s.append(time.perf_counter() - t1)
+            if r > 1 and fleet.migrations == 0 \
+                    and any(w.slots for w in fleet.workers):
+                # Force one live migration per multi-replica point (the
+                # backlogged phase has no free slot; the drain tail does).
+                try:
+                    fleet.migrate()
+                except (RuntimeError, ValueError):
+                    pass
+            if i >= n_streams and not alive:
+                break
+        wall_s = time.perf_counter() - t0
+        done = fleet.done
+        exact = all(
+            np.array_equal(
+                np.asarray(req.readout),
+                whole[lengths[req.rid % len(lengths)]][req.rid % bank])
+            for req in done)
+        fleet.shutdown()
+
+        p50 = float(np.percentile(tick_s, 50) * 1e3)
+        p99 = float(np.percentile(tick_s, 99) * 1e3)
+        shed_rate = shed / max(n_streams, 1)
+        name = f"fleet_r{r}" + ("_smoke" if smoke else "")
+        _row(name, wall_s * 1e6 / max(len(tick_s), 1),
+             f"exact={exact} completed={len(done)}/{n_streams} "
+             f"shed_rate={shed_rate:.3f} migrations={fleet.migrations} "
+             f"streams_per_s={len(done) / wall_s:.1f} "
+             f"p50_chunk_ms={p50:.2f} p99_chunk_ms={p99:.2f}")
+        rec = dict(
+            ablation="fleet_scaling", replicas=r, streams=n_streams,
+            completed=len(done), shed=shed, shed_rate=round(shed_rate, 4),
+            migrations=fleet.migrations,
+            streams_per_s=round(len(done) / wall_s, 2),
+            p50_chunk_ms=round(p50, 3), p99_chunk_ms=round(p99, 3),
+            exact=bool(exact))
+        if r > 1:
+            rec["migration_exact"] = bool(exact and fleet.migrations > 0)
+        _record(name, **rec)
+        if trace_out and r == replica_counts[-1]:
+            obs.default_tracer().export(trace_out)
+            print(f"# fleet chrome trace written to {trace_out}")
+
+
 ALL = [
     table1_chip_summary,
     fig4_aer_overhead,
@@ -945,6 +1070,7 @@ ALL = [
     engine_zero_skip,
     kernel_blocksparse,
     streaming_occupancy,
+    fleet_scaling,
     compiler_multicore,
     qat_sweep,
     facade_overhead,
@@ -972,6 +1098,14 @@ def main() -> None:
     ap.add_argument("--perf", action="store_true",
                     help="run only the block-sparse kernel perf ablation "
                          "(wall-us vs roofline bound, for the CI perf gate)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="run only the spidr.serve fleet-scaling ablation "
+                         "(1k streams over 1/2/4 replicas; p50/p99 chunk "
+                         "latency, streams/s, shed rate, migration "
+                         "exactness; --smoke serves a CI-sized subset)")
+    ap.add_argument("--fleet-trace-out", default=None, dest="fleet_trace_out",
+                    help="--fleet: also export the fleet's Chrome trace "
+                         "(serve.tick/fleet.migrate spans) to this path")
     ap.add_argument("--telemetry-overhead", action="store_true",
                     dest="telemetry_overhead",
                     help="run only the telemetry micro-bench (asserts "
@@ -990,6 +1124,9 @@ def main() -> None:
         fns = [lambda: facade_overhead(smoke=args.smoke)]
     elif args.perf:
         fns = [lambda: kernel_blocksparse(smoke=args.smoke)]
+    elif args.fleet:
+        fns = [lambda: fleet_scaling(smoke=args.smoke,
+                                     trace_out=args.fleet_trace_out)]
     elif args.telemetry_overhead:
         fns = [lambda: telemetry_overhead(smoke=args.smoke)]
     elif args.smoke:

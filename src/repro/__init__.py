@@ -25,7 +25,14 @@ from . import spidr
 from .core.network import SNNSpec, gesture_net, init_params, optical_flow_net
 from .core.quant import SUPPORTED_PRECISIONS, QuantSpec
 from .snn.export import ExportedNetwork
-from .spidr import CompiledSNN, DeployTarget, StreamSession, VerifyReport
+from .spidr import (
+    CompiledSNN,
+    DeployTarget,
+    Fleet,
+    ServeConfig,
+    StreamSession,
+    VerifyReport,
+)
 
 __all__ = [
     # The deployment facade (the primary public API).
@@ -34,6 +41,9 @@ __all__ = [
     "DeployTarget",
     "StreamSession",
     "VerifyReport",
+    # The serving fleet (spidr.serve).
+    "Fleet",
+    "ServeConfig",
     # Network construction.
     "SNNSpec",
     "gesture_net",

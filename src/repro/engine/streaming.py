@@ -106,11 +106,12 @@ class StreamSessionManager:
 
     def __init__(self, engine: SNNEngine, capacity: int = 4,
                  chunk_T: int = 2, *, metrics=None, tracer=None,
-                 collect_chunk_counts: bool = False):
+                 collect_chunk_counts: bool = False, device=None):
         assert capacity >= 1 and chunk_T >= 1
         self.engine = engine
         self.capacity = capacity
         self.chunk_T = chunk_T
+        self.device = device
         spec = engine.spec
         self._frame_shape = tuple(spec.input_hw) + (spec.in_channels,)
         # Telemetry (repro.obs).  ``None`` binds the process-wide defaults
@@ -131,6 +132,11 @@ class StreamSessionManager:
         self._positions_per_t = float(
             sum(s.fan_in * s.out_positions for s in spec.layer_shapes()))
         self.state = init_state(engine, capacity)
+        if device is not None:
+            # Replica device placement: commit the session's resident state
+            # to one host device so a fleet of sessions ticks on distinct
+            # devices (the jitted step follows its committed operands).
+            self.state = jax.device_put(self.state, device)
         self.active = [False] * capacity
         self.ended = [False] * capacity   # delivered a short (final) chunk
         # Per-slot cumulative accounting (host side, O(capacity)).
@@ -519,3 +525,112 @@ class StreamSessionManager:
             states = [PipelineState.from_dict(p) for p in per_core]
             pipe.append(states if self._schedule is not None else states[0])
         self._pipe_state = pipe
+
+    # -- live migration: one slot's durable state --------------------------
+    def export_slot(self, slot: int) -> dict:
+        """One live stream's complete durable state as a pure-numpy tree.
+
+        The per-slot slice of :meth:`state_dict` — resident Vmem, readout
+        accumulator, spike counters, the session table's cumulative
+        accounting, and the resumable handshake clocks.  Fresh host copies,
+        nothing aliases live buffers.  Because batch slots never interact
+        inside the engine, ``export_slot`` on manager A followed by
+        :meth:`import_slot` on manager B (same engine geometry) continues
+        the stream bit-exactly: identical spikes, readouts and cumulative
+        cycle/energy attribution to a never-migrated run.
+        """
+        if not self.active[slot]:
+            raise ValueError(
+                f"slot {slot} is not active — only a live stream's state "
+                "can be exported for migration")
+        st = self.state
+        return {
+            "schema": np.int64(SESSION_SCHEMA_VERSION),
+            "vmem": [None if v is None else np.asarray(v[slot]).copy()
+                     for v in st.vmem],
+            "readout_acc": np.asarray(st.readout_acc[slot]).copy(),
+            "out_counts": np.asarray(st.out_counts[:, slot]).copy(),
+            "in_counts": np.asarray(st.in_counts[:, slot]).copy(),
+            "table": {
+                "ended": bool(self.ended[slot]),
+                "timesteps": int(self.slot_timesteps[slot]),
+                "spikes": int(self.slot_spikes[slot]),
+                "cycles": int(self.slot_cycles[slot]),
+                "energy_uj": float(self.slot_energy_uj[slot]),
+                "route_cycles": self._slot_route_cycles[slot].copy(),
+                "core_cycles": self.slot_core_cycles[slot].copy(),
+                "imbalance": float(self.slot_imbalance[slot]),
+            },
+            "clocks": self._pipe_dicts(slot),
+        }
+
+    def import_slot(self, payload: dict, slot: Optional[int] = None) -> int:
+        """Install an :meth:`export_slot` payload into a free slot.
+
+        ``slot`` picks the destination explicitly (must be free); the
+        default takes the first free slot, like :meth:`open`.  The payload
+        must come from a session over the same engine geometry (layer
+        shapes, core count) — mismatches raise ``ValueError`` before any
+        state is touched.  Returns the destination slot, now active and
+        continuing the stream bit-exactly.
+        """
+        schema = int(payload["schema"])
+        if schema > SESSION_SCHEMA_VERSION:
+            raise ValueError(
+                f"slot payload schema {schema} is newer than this build's "
+                f"{SESSION_SCHEMA_VERSION} — upgrade the code or re-export")
+        if slot is None:
+            slot = next((i for i in range(self.capacity)
+                         if not self.active[i]), None)
+            if slot is None:
+                raise ValueError(
+                    "no free slot to import into — close a stream or "
+                    "migrate to a session with free capacity")
+        elif self.active[slot]:
+            raise ValueError(
+                f"slot {slot} already holds a live stream — import into a "
+                "free slot")
+        if len(payload["clocks"]) != self.n_cores:
+            raise ValueError(
+                f"slot payload carries {len(payload['clocks'])} core "
+                f"clock(s) but this session runs {self.n_cores} — was it "
+                "exported from a different compiled plan?")
+        st = self.state
+        for cur, new in zip(st.vmem, payload["vmem"]):
+            if (cur is None) != (new is None) or (
+                    cur is not None and cur.shape[1:] != np.shape(new)):
+                raise ValueError(
+                    "slot payload Vmem shapes do not match this engine's "
+                    "layers — migrate between replicas of the same "
+                    "network/spec")
+        vmem = tuple(
+            cur if cur is None
+            else cur.at[slot].set(jnp.asarray(new, jnp.int32))
+            for cur, new in zip(st.vmem, payload["vmem"]))
+        self.state = dataclasses.replace(
+            st,
+            vmem=vmem,
+            readout_acc=st.readout_acc.at[slot].set(
+                jnp.asarray(payload["readout_acc"],
+                            st.readout_acc.dtype)),
+            out_counts=st.out_counts.at[:, slot].set(
+                jnp.asarray(payload["out_counts"], jnp.int32)),
+            in_counts=st.in_counts.at[:, slot].set(
+                jnp.asarray(payload["in_counts"], jnp.int32)),
+        )
+        table = payload["table"]
+        self.active[slot] = True
+        self.ended[slot] = bool(table["ended"])
+        self.slot_timesteps[slot] = int(table["timesteps"])
+        self.slot_spikes[slot] = int(table["spikes"])
+        self.slot_cycles[slot] = int(table["cycles"])
+        self.slot_energy_uj[slot] = float(table["energy_uj"])
+        self._slot_route_cycles[slot] = np.asarray(table["route_cycles"],
+                                                   np.int64)
+        self.slot_core_cycles[slot] = np.asarray(table["core_cycles"],
+                                                 np.int64)
+        self.slot_imbalance[slot] = float(table["imbalance"])
+        states = [PipelineState.from_dict(p) for p in payload["clocks"]]
+        self._pipe_state[slot] = (states if self._schedule is not None
+                                  else states[0])
+        return slot

@@ -23,6 +23,11 @@ retired slots mid-flight (continuous batching over neuron state), and every
 reply carries the incremental readout plus cumulative cycles/energy for
 that stream alone.  Results are bit-identical to whole-stream serving.
 
+The SNN serving loop itself lives in ``repro.serving`` behind the
+``spidr.serve`` facade — this module is now a thin CLI over it
+(``--replicas N`` spreads streams across a fleet of N engine replicas).
+The old in-module server classes remain as deprecated shims below.
+
 Design (scaled-down vLLM-style):
   * a request queue feeds a PREFILL worker (one request at a time — CPU
     demo; on a pod this is a separate prefill mesh),
@@ -38,6 +43,7 @@ import argparse
 import dataclasses
 import logging
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -48,7 +54,7 @@ from repro import obs
 from repro.configs.base import get_config
 from repro.models import model as M
 from repro.models.transformer import init_decode_state
-from repro.obs.logs import request_context
+from repro.serving import BatchWorker, StreamRequest, StreamWorker
 
 # Structured logging (repro.obs.logs): ``main()`` calls
 # ``obs.logging_setup(json_mode=args.log_json)`` — every record carries the
@@ -173,373 +179,44 @@ class Server:
 # ---------------------------------------------------------------------------
 # SNN event-stream serving (fused multi-timestep engine).
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass
-class SNNRequest:
-    rid: int
-    events: np.ndarray                     # (T, H, W, C) binary event frames
-    readout: Optional[np.ndarray] = None   # filled on completion
-    submitted_at: float = 0.0
-    done_at: Optional[float] = None
-    # Streaming-path extras: progress + cumulative chip cost for this stream.
-    cursor: int = 0                        # timesteps delivered so far
-    first_reply_at: Optional[float] = None
-    cycles: int = 0
-    energy_uj: float = 0.0
-    # Concatenated per-chunk input-spike counts (T_so_far, n_layers) —
-    # populated only when the server collects chunk counts for the
-    # per-stream pipeline-timeline export (``--trace-out`` on multi-core).
-    input_counts: Optional[np.ndarray] = None
+#: Deprecated alias -- the request object moved to ``repro.serving``.
+SNNRequest = StreamRequest
 
 
-class SNNServer:
-    """Fixed-capacity batched SNN inference server.
+def _warn_deprecated(old: str) -> None:
+    warnings.warn(
+        f"repro.launch.serve.{old} is deprecated; serve through "
+        "spidr.serve(compiled, spidr.ServeConfig(...)) instead "
+        "(see docs/serving.md)",
+        DeprecationWarning, stacklevel=3)
 
-    Waiting requests are packed into a fixed (T, capacity, H, W, C) batch —
-    idle slots carry zero events, which the zero-skipping engine makes nearly
-    free — and one fused ``CompiledSNN.run`` serves the whole batch.
+
+class SNNServer(BatchWorker):
+    """Deprecated shim: use ``spidr.serve(compiled, batch=True)``.
+
+    The whole-stream batching loop now lives in
+    :class:`repro.serving.BatchWorker`; this subclass only adds the
+    ``DeprecationWarning``.
     """
 
     def __init__(self, compiled, capacity: int = 4):
-        self.compiled = compiled
-        self.capacity = capacity
-        self.waiting: list = []
-        self.done: list = []
-        self.total_input_counts = None
-        self.batches = 0
-        self._metrics = obs.default_registry()
-
-    def submit(self, req: SNNRequest):
-        req.submitted_at = time.monotonic()
-        self.waiting.append(req)
-
-    def step(self) -> bool:
-        if not self.waiting:
-            return False
-        t0 = time.monotonic()
-        batch = self.waiting[: self.capacity]
-        self.waiting = self.waiting[self.capacity:]
-        ev = np.zeros(
-            (batch[0].events.shape[0], self.capacity) + batch[0].events.shape[1:],
-            np.float32,
-        )
-        for i, req in enumerate(batch):
-            ev[:, i] = req.events
-        out = self.compiled.run(jnp.asarray(ev))
-        readout = np.asarray(out.readout)
-        now = time.monotonic()
-        for i, req in enumerate(batch):
-            req.readout = readout[i]
-            req.done_at = now
-            self.done.append(req)
-        counts = np.asarray(out.input_counts)
-        self.total_input_counts = (
-            counts if self.total_input_counts is None
-            else self.total_input_counts + counts
-        )
-        self.batches += 1
-        if self._metrics:
-            reg = self._metrics
-            reg.counter("spidr_serve_batches_total",
-                        "Whole-stream batches served").inc()
-            reg.histogram("spidr_serve_batch_seconds",
-                          "Whole-stream batch wall latency",
-                          edges=obs.metrics.LATENCY_BUCKETS_S
-                          ).observe(time.monotonic() - t0)
-            reg.gauge("spidr_serve_queue_depth",
-                      "Requests waiting for a slot").set(len(self.waiting))
-        return True
+        _warn_deprecated("SNNServer")
+        super().__init__(compiled, capacity)
 
 
-class StreamingSNNServer:
-    """Stateful continuous-batching server over persistent Vmem sessions.
+class StreamingSNNServer(StreamWorker):
+    """Deprecated shim: use ``spidr.serve(compiled, spidr.ServeConfig(...))``.
 
-    The SNN mirror of :class:`Server`'s decode loop: a fixed bank of
-    ``capacity`` slots, each holding one live stream's neuron state inside a
-    ``CompiledSNN.open_stream()`` session; every ``step()`` delivers each
-    live stream's next ``chunk_T`` event frames and advances all slots in
-    one fixed-shape jitted chunk step.  Finished streams retire and free
-    their slot for the next waiter; idle slots ride along as all-zero spike
-    tiles that the zero-skip path eliminates.
-
-    Durability (``runtime.fault_tolerance`` + ``CompiledSNN.snapshot``):
-
-      * ``watchdog_s`` arms a :class:`StepWatchdog` around every session
-        step — a hung tick becomes a :class:`RestartableFailure`;
-      * every tick runs through ``retrying``: a poisoned tick rewinds the
-        session (and all request cursors) to the last completed tick and
-        replays, up to ``max_restarts`` times;
-      * ``snapshot_dir``/``snapshot_every`` persist the full serving state
-        (weights, session slots, stream-id/cursor table, finished results)
-        every N ticks; :meth:`restore` resumes it in a fresh process,
-        bit-exactly — the upgrade drill (``tools/upgrade_drill.py``)
-        SIGKILLs a serving process mid-chunk and proves zero streams lose
-        state.
+    The stateful continuous-batching loop (persistent-Vmem slots,
+    watchdog/rewind durability, snapshot/restore) now lives in
+    :class:`repro.serving.StreamWorker`; this subclass only adds the
+    ``DeprecationWarning``.  ``restore`` is inherited and returns this
+    class, so drilled snapshots keep resuming through the old name.
     """
 
-    def __init__(self, compiled, capacity: int = 4, chunk_T: int = 2, *,
-                 watchdog_s: Optional[float] = None, max_restarts: int = 3,
-                 snapshot_dir: Optional[str] = None, snapshot_every: int = 0,
-                 fail_at_tick: Optional[int] = None, _session=None,
-                 collect_chunk_counts: bool = False):
-        from repro.runtime.fault_tolerance import StepWatchdog, retrying
-
-        self.compiled = compiled
-        self.sessions = (_session if _session is not None
-                         else compiled.open_stream(
-                             capacity=capacity, chunk_T=chunk_T,
-                             collect_chunk_counts=collect_chunk_counts))
-        self.chunk_T = chunk_T
-        self.waiting: list = []
-        self.done: list = []
-        self.slots: dict = {}          # slot -> SNNRequest
-        self.ticks = 0
-        self.snapshot_dir = snapshot_dir
-        self.snapshot_every = snapshot_every
-        # Telemetry: the process-wide registry/tracer (disabled unless
-        # obs.enable_metrics()/enable_tracing() ran, e.g. via the
-        # --metrics-out/--trace-out flags).
-        self._metrics = obs.default_registry()
-        self._tracer = obs.default_tracer()
-        # Fault injection for tests/drills: raise RestartableFailure once,
-        # mid-tick (after the session stepped, before bookkeeping) — the
-        # worst case the rewind has to undo.  ``mid_tick_hook`` is the
-        # generic form (the upgrade drill SIGKILLs the process from it).
-        self.fail_at_tick = fail_at_tick
-        self.mid_tick_hook = None
-        self._watchdog = (StepWatchdog(
-            watchdog_s,
-            counter=self._metrics.counter(
-                "spidr_serve_watchdog_timeouts_total",
-                "Watchdog deadline firings") if self._metrics else None)
-            if watchdog_s is not None else None)
-        self._rewind_point = None
-        self._step = retrying(self._tick, self._rewind,
-                              max_restarts=max_restarts,
-                              on_restart=self._count_rewind)
-        self._mark()
-
-    def _count_rewind(self) -> None:
-        if self._metrics:
-            self._metrics.counter(
-                "spidr_serve_rewinds_total",
-                "Rewind-and-replay recoveries").inc()
-
-    @property
-    def restarts(self) -> int:
-        """Rewind-and-replay count since the server started."""
-        return self._step.state["restarts"]
-
-    def submit(self, req: SNNRequest):
-        req.submitted_at = time.monotonic()
-        self.waiting.append(req)
-
-    def _admit(self):
-        while self.waiting:
-            slot = self.sessions.open()
-            if slot is None:
-                # Admission deferred: every waiter stays queued this tick.
-                if self._metrics:
-                    self._metrics.counter(
-                        "spidr_serve_rejections_total",
-                        "Ticks on which waiting streams found no free slot"
-                    ).inc()
-                return
-            req = self.waiting.pop(0)
-            self.slots[slot] = req
-            if self._metrics:
-                self._metrics.counter(
-                    "spidr_serve_admissions_total",
-                    "Streams admitted into a session slot").inc()
-            with request_context(req.rid):
-                log.debug("admitted stream %d into slot %d", req.rid, slot)
-
-    # -- fault tolerance: rewind-and-replay --------------------------------
-    def _mark(self):
-        """Record the last-completed-tick state the next rewind returns to.
-
-        The session part is a pure-numpy ``state_dict`` (never aliases live
-        buffers); the request part saves each request's mutable progress
-        fields so the *same* objects callers hold are rolled back.
-        """
-        reqs = list(self.slots.values()) + self.waiting + self.done
-        self._rewind_point = {
-            "session": self.sessions.state_dict(),
-            "slots": dict(self.slots),
-            "waiting": list(self.waiting),
-            "done": list(self.done),
-            "ticks": self.ticks,
-            "reqs": [(r, r.cursor, r.readout, r.cycles, r.energy_uj,
-                      r.first_reply_at, r.done_at, r.input_counts)
-                     for r in reqs],
-        }
-
-    def _rewind(self, *args, **kwargs):
-        cp = self._rewind_point
-        self.sessions.load_state_dict(cp["session"])
-        self.slots = dict(cp["slots"])
-        self.waiting = list(cp["waiting"])
-        self.done = list(cp["done"])
-        self.ticks = cp["ticks"]
-        for r, cur, ro, cyc, uj, fr, da, ic in cp["reqs"]:
-            r.cursor, r.readout, r.cycles, r.energy_uj = cur, ro, cyc, uj
-            r.first_reply_at, r.done_at, r.input_counts = fr, da, ic
-        log.info("rewound to tick %d and replaying", self.ticks)
-
-    def _tick(self) -> bool:
-        self._admit()
-        if not self.slots:
-            return False
-        chunks = {slot: req.events[req.cursor:req.cursor + self.chunk_T]
-                  for slot, req in self.slots.items()}
-        if self._watchdog is not None:
-            self._watchdog.arm()
-        try:
-            updates = self.sessions.step(chunks)
-        finally:
-            if self._watchdog is not None:
-                self._watchdog.disarm()
-        if self._watchdog is not None:
-            self._watchdog.check()
-        if self.mid_tick_hook is not None:
-            self.mid_tick_hook(self.ticks + 1)
-        if self.fail_at_tick is not None and self.ticks + 1 >= self.fail_at_tick:
-            from repro.runtime.fault_tolerance import RestartableFailure
-
-            self.fail_at_tick = None
-            raise RestartableFailure(
-                f"injected fault at tick {self.ticks + 1}")
-        now = time.monotonic()
-        for slot, up in updates.items():
-            req = self.slots[slot]
-            req.cursor += chunks[slot].shape[0]
-            # Incremental reply: cumulative readout + chip cost so far.
-            req.readout = up.readout
-            req.cycles, req.energy_uj = up.cycles, up.energy_uj
-            if up.input_counts is not None:
-                req.input_counts = (
-                    up.input_counts if req.input_counts is None
-                    else np.concatenate([req.input_counts, up.input_counts]))
-            if req.first_reply_at is None:
-                req.first_reply_at = now
-            if req.cursor >= req.events.shape[0]:
-                req.done_at = now
-                self.done.append(req)
-                self.sessions.close(slot)   # free the slot: continuous batching
-                del self.slots[slot]
-                with request_context(req.rid):
-                    log.info(
-                        "stream %d done: %d timesteps, %d cycles, %.2f uJ",
-                        req.rid, req.cursor, req.cycles, req.energy_uj)
-        self.ticks += 1
-        return True
-
-    def step(self) -> bool:
-        # Mark *now*, not after: requests submitted since the last tick are
-        # part of the state a mid-tick failure must rewind to.
-        self._mark()
-        t0 = time.monotonic()
-        if self._tracer:
-            with self._tracer.span("serve.tick", cat="serve",
-                                   tick=self.ticks):
-                alive = self._step()
-        else:
-            alive = self._step()
-        if self._metrics and alive:
-            reg = self._metrics
-            reg.histogram("spidr_serve_tick_seconds",
-                          "Streaming tick wall latency",
-                          edges=obs.metrics.LATENCY_BUCKETS_S
-                          ).observe(time.monotonic() - t0)
-            reg.gauge("spidr_serve_queue_depth",
-                      "Requests waiting for a slot").set(len(self.waiting))
-        if alive and self.snapshot_dir and self.snapshot_every \
-                and self.ticks % self.snapshot_every == 0:
-            self.save_snapshot()
-        return alive
-
-    # -- durability: process-level snapshot/restore ------------------------
-    @staticmethod
-    def _result_json(req: SNNRequest) -> dict:
-        return {"rid": int(req.rid), "cursor": int(req.cursor),
-                "readout": (None if req.readout is None
-                            else np.asarray(req.readout).tolist()),
-                "cycles": int(req.cycles),
-                "energy_uj": float(req.energy_uj)}
-
-    def save_snapshot(self) -> None:
-        """Persist the complete serving state (atomic, checksummed).
-
-        One ``CompiledSNN.snapshot`` step at ``step=self.ticks``: weights +
-        the live session, plus the server's own bookkeeping (stream-id <->
-        slot map, per-stream cursors, finished results) as JSON ``extra``.
-        Replay after :meth:`restore` is implicit — chunks are re-derived
-        from the restored cursors.
-        """
-        assert self.snapshot_dir, "construct the server with snapshot_dir="
-        t0 = time.monotonic()
-        extra = {"server": {
-            "ticks": int(self.ticks),
-            "slots": {str(slot): int(req.rid)
-                      for slot, req in self.slots.items()},
-            "cursors": {str(req.rid): int(req.cursor)
-                        for req in list(self.slots.values()) + self.waiting},
-            "waiting": [int(req.rid) for req in self.waiting],
-            "done": [self._result_json(req) for req in self.done],
-        }}
-        self.compiled.snapshot(self.snapshot_dir, step=self.ticks,
-                               sessions=[self.sessions], extra=extra)
-        if self._metrics:
-            self._metrics.histogram(
-                "spidr_serve_snapshot_seconds",
-                "save_snapshot wall duration (server bookkeeping + "
-                "checkpoint write)",
-                edges=obs.metrics.LATENCY_BUCKETS_S
-            ).observe(time.monotonic() - t0)
-
-    @classmethod
-    def restore(cls, path, requests_by_rid: dict, compiled=None, *,
-                watchdog_s: Optional[float] = None, max_restarts: int = 3,
-                snapshot_every: int = 0, step: Optional[int] = None
-                ) -> "StreamingSNNServer":
-        """Resume a server from its latest :meth:`save_snapshot`.
-
-        ``requests_by_rid`` maps stream id -> :class:`SNNRequest` carrying
-        the stream's (deterministically regenerated) events; in-flight
-        requests resume at their snapshotted cursor, finished results are
-        reloaded from the snapshot.  The restored server then serves every
-        stream bit-identically to one that was never killed.
-        """
-        from repro import spidr
-
-        info = spidr.read_snapshot_meta(path, step)
-        compiled = spidr.restore(path, compiled=compiled, step=info["step"])
-        session = compiled.sessions[-1]
-        srv = cls(compiled, capacity=session.capacity,
-                  chunk_T=session.chunk_T, watchdog_s=watchdog_s,
-                  max_restarts=max_restarts, snapshot_dir=str(path),
-                  snapshot_every=snapshot_every, _session=session)
-        state = info["extra"]["server"]
-        srv.ticks = int(state["ticks"])
-        cursors = {int(k): int(v) for k, v in state["cursors"].items()}
-        for slot, rid in state["slots"].items():
-            req = requests_by_rid[int(rid)]
-            req.cursor = cursors[int(rid)]
-            srv.slots[int(slot)] = req
-        srv.waiting = [requests_by_rid[int(rid)]
-                       for rid in state["waiting"]]
-        for req in srv.waiting:
-            req.cursor = cursors[int(req.rid)]
-        for d in state["done"]:
-            req = requests_by_rid.get(int(d["rid"])) or SNNRequest(
-                rid=int(d["rid"]), events=np.zeros((0,), np.float32))
-            req.cursor = int(d["cursor"])
-            req.readout = (None if d["readout"] is None
-                           else np.asarray(d["readout"], np.int32))
-            req.cycles = int(d["cycles"])
-            req.energy_uj = float(d["energy_uj"])
-            srv.done.append(req)
-        srv._mark()
-        return srv
+    def __init__(self, *args, **kwargs):
+        _warn_deprecated("StreamingSNNServer")
+        super().__init__(*args, **kwargs)
 
 
 def serve_snn(args):
@@ -587,59 +264,75 @@ def serve_snn(args):
     # exist on the multi-core (scheduled) deployment.
     want_timeline = bool(trace_out) and compiled.schedule is not None
 
+    replicas = getattr(args, "replicas", 1)
     if args.streaming:
-        server = StreamingSNNServer(
-            compiled, capacity=args.capacity, chunk_T=args.chunk_T,
+        fleet = spidr.serve(compiled, spidr.ServeConfig(
+            n_replicas=replicas,
+            capacity=args.capacity,
+            chunk_T=args.chunk_T,
+            max_queue=max(64, args.requests),
             watchdog_s=getattr(args, "watchdog_s", None),
             snapshot_dir=getattr(args, "snapshot_dir", None),
             snapshot_every=getattr(args, "snapshot_every", 0),
-            collect_chunk_counts=want_timeline)
+            collect_chunk_counts=want_timeline))
         for r in range(args.requests):
-            server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
+            fleet.submit(np.asarray(ev[:, r]), rid=r)
         t0 = time.monotonic()
         ticks = 0
-        while server.step():
+        while fleet.step():
             ticks += 1
             if metrics_out and metrics_every and ticks % metrics_every == 0:
                 obs.default_registry().write(metrics_out)
         dt = time.monotonic() - t0
-        lat = [r.done_at - r.submitted_at for r in server.done]
-        ttfr = [r.first_reply_at - r.submitted_at for r in server.done]
+        done = fleet.done
+        lat = [r.done_at - r.submitted_at for r in done]
+        ttfr = [r.first_reply_at - r.submitted_at for r in done]
         log.info(
-            "streamed %d %s streams (%d timesteps, chunk_T=%d) in %.2fs "
-            "(%.1f streams/s, %d ticks); first-reply p50 %.3fs; "
-            "latency p50 %.3fs; backend=%s",
-            len(server.done), args.snn, spec.timesteps, args.chunk_T, dt,
-            len(server.done) / dt, ticks, float(np.median(ttfr)),
-            float(np.median(lat)), compiled.engine.cfg.backend,
+            "streamed %d %s streams (%d timesteps, chunk_T=%d) over %d "
+            "replica(s) in %.2fs (%.1f streams/s, %d fleet ticks); "
+            "first-reply p50 %.3fs; latency p50 %.3fs; backend=%s",
+            len(done), args.snn, spec.timesteps, args.chunk_T,
+            fleet.n_replicas, dt, len(done) / dt, ticks,
+            float(np.median(ttfr)), float(np.median(lat)),
+            compiled.engine.cfg.backend,
         )
-        cyc = [r.cycles for r in server.done]
-        uj = [r.energy_uj for r in server.done]
+        cyc = [r.cycles for r in done]
+        uj = [r.energy_uj for r in done]
         log.info(
             "chip estimate/stream (cumulative): %.0f cycles p50, %.1f uJ p50",
             float(np.median(cyc)), float(np.median(uj)),
         )
         _export_telemetry(compiled, metrics_out, trace_out,
-                          [(r.rid, r.input_counts) for r in server.done]
+                          [(r.rid, r.input_counts) for r in done]
                           if want_timeline else [])
-        return server
+        fleet.shutdown()
+        return fleet
 
-    server = SNNServer(compiled, capacity=args.capacity)
+    fleet = spidr.serve(compiled, spidr.ServeConfig(
+        n_replicas=replicas, capacity=args.capacity, batch=True,
+        max_queue=max(64, args.requests)))
     for r in range(args.requests):
-        server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
+        fleet.submit(np.asarray(ev[:, r]), rid=r)
 
     t0 = time.monotonic()
-    while server.step():
-        pass
+    fleet.drain()
     dt = time.monotonic() - t0
-    lat = [r.done_at - r.submitted_at for r in server.done]
-    mean_counts = server.total_input_counts / max(len(server.done), 1)
+    done = fleet.done
+    lat = [r.done_at - r.submitted_at for r in done]
+    total_counts = None
+    batches = 0
+    for w in fleet.workers:
+        batches += w.batches
+        if w.total_input_counts is not None:
+            total_counts = (w.total_input_counts if total_counts is None
+                            else total_counts + w.total_input_counts)
+    mean_counts = total_counts / max(len(done), 1)
     cost = compiled.cost(input_counts=mean_counts)
     log.info(
-        "served %d %s streams (%d timesteps each) in %.2fs "
-        "(%.1f streams/s, %d batches); latency p50 %.3fs; backend=%s",
-        len(server.done), args.snn, spec.timesteps, dt,
-        len(server.done) / dt, server.batches, float(np.median(lat)),
+        "served %d %s streams (%d timesteps each) over %d replica(s) in "
+        "%.2fs (%.1f streams/s, %d batches); latency p50 %.3fs; backend=%s",
+        len(done), args.snn, spec.timesteps, fleet.n_replicas, dt,
+        len(done) / dt, batches, float(np.median(lat)),
         compiled.engine.cfg.backend,
     )
     if compiled.schedule is None:
@@ -660,7 +353,8 @@ def serve_snn(args):
         )
     _export_telemetry(compiled, metrics_out, trace_out,
                       [("batch-mean", mean_counts)] if want_timeline else [])
-    return server
+    fleet.shutdown()
+    return fleet
 
 
 def _export_telemetry(compiled, metrics_out, trace_out, stream_counts):
@@ -708,6 +402,10 @@ def main():
                          "chunks, replies are incremental")
     ap.add_argument("--chunk-T", type=int, default=2, dest="chunk_T",
                     help="timesteps per delivered chunk in --streaming mode")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="SNN path: serve through a fleet of N engine "
+                         "replicas (spidr.serve) — streams are scheduled "
+                         "across them")
     ap.add_argument("--watchdog-s", type=float, default=None,
                     dest="watchdog_s",
                     help="--streaming: per-tick watchdog deadline; a hung "

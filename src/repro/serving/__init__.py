@@ -1,0 +1,32 @@
+"""The serving tier: replicated engines, session scheduling, live migration.
+
+Public entry point: ``spidr.serve(compiled_or_replicas, ServeConfig) ->
+Fleet`` (re-exported on the ``repro.spidr`` facade).  The pieces:
+
+  * :class:`ServeConfig` — declarative fleet shape + scheduling policy;
+  * :class:`Fleet` — N replicated deployments behind
+    ``submit``/``stream``/``drain``/``shutdown``;
+  * :class:`SessionScheduler` — bounded FIFO admission, deterministic
+    placement, crash re-placement;
+  * :class:`StreamWorker`/:class:`BatchWorker` — the per-replica tick
+    loops (formerly ``launch.serve.StreamingSNNServer``/``SNNServer``,
+    which remain as deprecated shims);
+  * :class:`FleetOverloaded` — the explicit load-shedding reply.
+"""
+from .config import FleetOverloaded, ServeConfig
+from .fleet import Fleet, StreamHandle, StreamProgress, serve
+from .scheduler import SessionScheduler
+from .worker import BatchWorker, StreamRequest, StreamWorker
+
+__all__ = [
+    "BatchWorker",
+    "Fleet",
+    "FleetOverloaded",
+    "ServeConfig",
+    "SessionScheduler",
+    "StreamHandle",
+    "StreamProgress",
+    "StreamRequest",
+    "StreamWorker",
+    "serve",
+]

@@ -21,10 +21,17 @@ backend, chunking, stream capacity, compiler overrides), then compile:
     compiled = spidr.restore(path)        #  every open stream) -> resumed
                                           #  bit-exactly in a fresh process
 
+    fleet = spidr.serve(compiled,         # replicated serving fleet with
+                        n_replicas=2)     #  scheduling, shedding and live
+    handle = fleet.submit(events)         #  cross-replica migration
+    fleet.drain(); fleet.shutdown()
+
 Every path is bit-exact with the internal layers it fronts
-(``repro.engine``, ``repro.compiler``, ``repro.snn.export`` — documented
-internals; see ``docs/api.md`` for the lifecycle walkthrough).
+(``repro.engine``, ``repro.compiler``, ``repro.serving``,
+``repro.snn.export`` — documented internals; see ``docs/api.md`` for the
+lifecycle walkthrough and ``docs/serving.md`` for the fleet).
 """
+from ..serving import Fleet, FleetOverloaded, ServeConfig, StreamHandle, serve
 from .compiled import (
     CompiledSNN,
     SlotUpdate,
@@ -41,12 +48,17 @@ __all__ = [
     "BACKENDS",
     "CompiledSNN",
     "DeployTarget",
+    "Fleet",
+    "FleetOverloaded",
     "PRECISION_PAIRS",
+    "ServeConfig",
     "SlotUpdate",
+    "StreamHandle",
     "StreamSession",
     "VerifyReport",
     "compile",
     "load",
     "read_snapshot_meta",
     "restore",
+    "serve",
 ]

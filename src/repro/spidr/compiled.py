@@ -194,14 +194,21 @@ class StreamSession:
     delivery contract is the manager's (every open slot delivers a chunk
     every tick; a short chunk ends its stream) — violations raise with the
     manager's diagnostics instead of corrupting state.
+
+    Lifecycle contract (tested in ``tests/test_fleet.py``): the session is
+    a context manager; :meth:`close` is idempotent — closing an already
+    closed slot (or the whole session twice) is a no-op — while
+    :meth:`open`/:meth:`step` on a closed session raise ``RuntimeError``.
     """
 
     def __init__(self, engine: SNNEngine, capacity: int, chunk_T: int,
                  collect_chunk_counts: bool = False, metrics=None,
-                 tracer=None):
+                 tracer=None, device=None):
         self._manager = StreamSessionManager(
             engine, capacity=capacity, chunk_T=chunk_T, metrics=metrics,
-            tracer=tracer, collect_chunk_counts=collect_chunk_counts)
+            tracer=tracer, collect_chunk_counts=collect_chunk_counts,
+            device=device)
+        self._closed = False
 
     @property
     def capacity(self) -> int:
@@ -232,26 +239,96 @@ class StreamSession:
         (the session must have matching capacity/engine geometry)."""
         self._manager.load_state_dict(d)
 
+    @property
+    def closed(self) -> bool:
+        """True once the whole session was retired via no-arg :meth:`close`
+        (or by leaving its ``with`` block)."""
+        return self._closed
+
+    def _require_open(self, what: str) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"cannot {what} on a closed StreamSession — open a new "
+                "session with CompiledSNN.open_stream()")
+
     def open(self) -> Optional[int]:
         """Allocate a slot for a new stream; None if the session is full."""
+        self._require_open("open a stream")
         return self._manager.open()
 
     def step(self, chunks: dict) -> dict:
         """Advance every open slot by one chunk: ``{slot: (t, H, W, C)}``
         events in, ``{slot: SlotUpdate}`` incremental replies out."""
+        self._require_open("step")
         return self._manager.step(chunks)
 
-    def close(self, slot: int) -> None:
-        """Retire a stream and free its slot for reuse."""
+    def close(self, slot: Optional[int] = None) -> None:
+        """Retire one stream slot — or, with no argument, the whole session.
+
+        Idempotent by contract: closing a slot that is not open, or
+        closing an already closed session, is a no-op (the double-close
+        of a shared handle is not an error worth crashing a server for).
+        A no-arg close retires every open slot and marks the session
+        closed; subsequent :meth:`open`/:meth:`step` raise
+        ``RuntimeError``.
+        """
+        if slot is None:
+            for s, active in enumerate(self._manager.active):
+                if active:
+                    self._manager.close(s)
+            self._closed = True
+            return
+        if self._closed or not self._manager.active[slot]:
+            return
         self._manager.close(slot)
+
+    def export_slot(self, slot: int) -> dict:
+        """One live stream's durable state as a pure-numpy tree — feed to
+        another session's :meth:`import_slot` to migrate the stream
+        bit-exactly (see ``StreamSessionManager.export_slot``)."""
+        self._require_open("export a slot")
+        return self._manager.export_slot(slot)
+
+    def import_slot(self, payload: dict, slot: Optional[int] = None) -> int:
+        """Install a migrated stream's :meth:`export_slot` payload into a
+        free slot (first free by default); returns the destination slot."""
+        self._require_open("import a slot")
+        return self._manager.import_slot(payload, slot)
+
+    def iter_chunks(self, events, slot: Optional[int] = None):
+        """Serve one whole stream through this session, yielding each
+        chunk's :class:`SlotUpdate`.
+
+        ``events`` is one stream's ``(T, H, W, C)`` frames; they are
+        delivered ``chunk_T`` timesteps per tick.  With no ``slot`` the
+        helper opens one (raising ``RuntimeError`` when the session is
+        full) and closes it when the stream ends — including on early
+        ``break``/error, since generator cleanup runs the ``finally``.
+        Other live slots must keep delivering through their own ``step``
+        calls as usual; this helper is the one-stream convenience path.
+        """
+        self._require_open("iterate a stream")
+        events = np.asarray(events)
+        own = slot is None
+        if own:
+            slot = self._manager.open()
+            if slot is None:
+                raise RuntimeError(
+                    f"session is full ({self.capacity} slots live) — "
+                    "close a stream or open a larger session")
+        try:
+            for lo in range(0, events.shape[0], self.chunk_T):
+                yield self._manager.step(
+                    {slot: events[lo:lo + self.chunk_T]})[slot]
+        finally:
+            if own and not self._closed and self._manager.active[slot]:
+                self._manager.close(slot)
 
     def __enter__(self) -> "StreamSession":
         return self
 
     def __exit__(self, *exc) -> None:
-        for slot, active in enumerate(self._manager.active):
-            if active:
-                self._manager.close(slot)
+        self.close()
 
 
 class CompiledSNN:
@@ -335,7 +412,7 @@ class CompiledSNN:
     def open_stream(self, capacity: Optional[int] = None,
                     chunk_T: Optional[int] = None,
                     collect_chunk_counts: bool = False, metrics=None,
-                    tracer=None) -> StreamSession:
+                    tracer=None, device=None) -> StreamSession:
         """Open a persistent-Vmem streaming session.
 
         ``capacity`` / ``chunk_T`` default to the target's
@@ -355,6 +432,10 @@ class CompiledSNN:
         ``obs.enable_metrics()``/``enable_tracing()`` ran); pass a private
         ``MetricsRegistry``/``Tracer`` to isolate, or ``False`` to pin
         telemetry hard off for this session.
+
+        ``device`` commits the session's resident state to one host
+        device, so a fleet of sessions over the same deployment ticks on
+        distinct devices (``spidr.serve`` replica placement).
         """
         capacity = self.target.stream_capacity if capacity is None \
             else capacity
@@ -366,7 +447,8 @@ class CompiledSNN:
         session = StreamSession(self.engine, capacity=capacity,
                                 chunk_T=chunk_T, metrics=metrics,
                                 tracer=tracer,
-                                collect_chunk_counts=collect_chunk_counts)
+                                collect_chunk_counts=collect_chunk_counts,
+                                device=device)
         self._sessions.append(session)
         return session
 

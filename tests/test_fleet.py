@@ -1,0 +1,414 @@
+"""The serving fleet contract: ``spidr.serve`` end to end.
+
+What this suite pins:
+
+  * placement is a pure function of arrival order — two fleets fed the
+    same submissions place every stream identically;
+  * live cross-replica migration (``export_slot``/``import_slot``) is
+    bit-exact: a migrated stream's readout, cycles and energy equal a
+    never-migrated run's;
+  * admission is bounded — past ``max_queue`` the fleet sheds with an
+    explicit :class:`FleetOverloaded` reply, and recovers once capacity
+    frees up;
+  * a crashed replica's streams re-place deterministically (queue front,
+    progress reset) and still finish bit-exact;
+  * lifecycle edges: double ``close()`` is a no-op, ``submit()`` after
+    ``shutdown()`` raises, duplicate rids raise, threaded fleets drain;
+  * the pre-fleet server classes survive as deprecated-but-working shims.
+"""
+import functools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, spidr
+from repro.configs import spidr_gesture
+from repro.core.network import init_params
+from repro.serving import (
+    FleetOverloaded,
+    ServeConfig,
+    SessionScheduler,
+    StreamRequest,
+    StreamWorker,
+)
+
+HW, T = (16, 16), 6
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(chunk_T=3, capacity=2):
+    spec = spidr_gesture.reduced(hw=HW, timesteps=T)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    return spidr.compile(spec, params, spidr.DeployTarget(
+        weight_bits=4, backend="jnp", chunk_T=chunk_T,
+        stream_capacity=capacity))
+
+
+def _streams(n, t=T, seed=1):
+    rng = np.random.default_rng(seed)
+    return [(rng.random((t,) + HW + (2,)) < 0.1).astype(np.float32)
+            for _ in range(n)]
+
+
+@functools.lru_cache(maxsize=None)
+def _reference_readouts(n=6, t=T, seed=1):
+    """Whole-stream ``CompiledSNN.run`` readouts — the exactness oracle."""
+    ev = np.stack(_streams(n, t, seed), axis=1)
+    return np.asarray(_compiled().run(jnp.asarray(ev)).readout)
+
+
+def _serve_all(fleet, evs):
+    handles = [fleet.submit(e, rid=i) for i, e in enumerate(evs)]
+    fleet.drain()
+    return handles
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig validation.
+# ---------------------------------------------------------------------------
+class TestServeConfig:
+    @pytest.mark.parametrize("kwargs", [
+        dict(n_replicas=0),
+        dict(max_queue=0),
+        dict(placement="random"),
+        dict(mode="async"),
+        dict(batch=True, migrate_every=2),
+        dict(capacity=-1),
+        dict(chunk_T=0),
+        dict(devices=42),
+    ])
+    def test_invalid_configs_raise(self, kwargs):
+        with pytest.raises(ValueError):
+            ServeConfig(**kwargs)
+
+    def test_replica_list_count_mismatch(self):
+        c = _compiled()
+        with pytest.raises(ValueError, match="n_replicas"):
+            spidr.serve([c, c], ServeConfig(n_replicas=3))
+        with pytest.raises(ValueError):
+            spidr.serve([], ServeConfig())
+
+    def test_device_list_length_mismatch(self):
+        with pytest.raises(ValueError, match="device"):
+            spidr.serve(_compiled(), ServeConfig(
+                n_replicas=2, devices=[None]))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic placement.
+# ---------------------------------------------------------------------------
+class TestPlacement:
+    def test_same_arrival_order_places_identically(self):
+        evs = _streams(6)
+
+        def run():
+            fleet = spidr.serve(_compiled(), ServeConfig(
+                n_replicas=2, capacity=2, chunk_T=3))
+            hs = _serve_all(fleet, evs)
+            placements = {h.rid: list(h.placements) for h in hs}
+            fleet.shutdown()
+            return placements
+
+        assert run() == run()
+
+    def test_least_loaded_prefers_emptier_replica(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3))
+        hs = [fleet.submit(e, rid=i) for i, e in enumerate(_streams(3))]
+        fleet.step()
+        # 3 streams over 2x2 slots: replicas 0,1,0 in arrival order.
+        assert [h.replica for h in hs] == [0, 1, 0]
+        fleet.shutdown()
+
+    def test_round_robin_policy_cycles(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3, placement="round-robin"))
+        hs = [fleet.submit(e, rid=i) for i, e in enumerate(_streams(4))]
+        fleet.step()
+        assert [h.replica for h in hs] == [0, 1, 0, 1]
+        fleet.shutdown()
+
+    def test_results_match_whole_stream_reference(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3))
+        hs = _serve_all(fleet, _streams(6))
+        ref = _reference_readouts()
+        for h in hs:
+            assert h.done and h.timesteps == T
+            np.testing.assert_array_equal(np.asarray(h.readout), ref[h.rid])
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Live migration (the PR-6 snapshot path, per slot).
+# ---------------------------------------------------------------------------
+class TestMigration:
+    def test_mid_stream_migration_is_bit_exact(self):
+        evs = _streams(3)
+        # Reference: same arrival order, single replica, no migration.
+        ref_fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=1, capacity=2, chunk_T=3))
+        ref = {h.rid: (np.asarray(h.readout).copy(), h.cycles, h.energy_uj)
+               for h in _serve_all(ref_fleet, evs)}
+        ref_fleet.shutdown()
+
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3))
+        hs = [fleet.submit(e, rid=i) for i, e in enumerate(evs)]
+        fleet.step()  # every stream mid-flight (1 of 2 chunks delivered)
+        moved = next(h for h in hs if h.status == "running")
+        dst = fleet.migrate(moved.rid)
+        assert moved.replica == dst and moved.migrations == 1
+        fleet.drain()
+        for h in hs:
+            r, cyc, uj = ref[h.rid]
+            np.testing.assert_array_equal(np.asarray(h.readout), r)
+            assert (h.cycles, h.energy_uj) == (cyc, uj)
+        assert fleet.migrations == 1
+        fleet.shutdown()
+
+    def test_migrate_unknown_or_finished_stream_raises(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3))
+        with pytest.raises(ValueError, match="no stream"):
+            fleet.migrate()
+        with pytest.raises(ValueError, match="not running"):
+            fleet.migrate(99)
+        fleet.shutdown()
+
+    def test_batch_fleet_rejects_migration(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, batch=True))
+        with pytest.raises(RuntimeError, match="batch"):
+            fleet.migrate()
+        fleet.shutdown()
+
+    def test_export_import_slot_roundtrip(self):
+        ev = _streams(1)[0]
+        a = _compiled().open_stream(capacity=2, chunk_T=3)
+        b = _compiled().open_stream(capacity=2, chunk_T=3)
+        slot = a.open()
+        first = a.step({slot: ev[:3]})[slot]
+        payload = a.export_slot(slot)
+        new_slot = b.import_slot(payload)
+        a.close(slot)
+        rest = b.step({new_slot: ev[3:]})[new_slot]
+        ref = _reference_readouts(1)  # bank seed matches stream 0
+        assert first.timesteps == 3 and rest.timesteps == T
+        np.testing.assert_array_equal(np.asarray(rest.readout), ref[0])
+        a.close()
+        b.close()
+
+    def test_export_slot_requires_live_stream(self):
+        sess = _compiled().open_stream(capacity=2, chunk_T=3)
+        with pytest.raises(ValueError):
+            sess.export_slot(0)
+        sess.close()
+
+
+# ---------------------------------------------------------------------------
+# Bounded admission + explicit shedding.
+# ---------------------------------------------------------------------------
+class TestShedding:
+    def test_overloaded_submit_sheds_explicitly(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=1, capacity=1, chunk_T=3, max_queue=2))
+        evs = _streams(4)
+        fleet.submit(evs[0], rid=0)
+        fleet.submit(evs[1], rid=1)
+        with pytest.raises(FleetOverloaded, match="queue is full"):
+            fleet.submit(evs[2], rid=2)
+        assert fleet.shed == 1
+        # Shed streams are not admitted: rid 2 never appears.
+        assert set(fleet.handles) == {0, 1}
+        # Capacity frees after a drain; the same rid can re-enter.
+        fleet.drain()
+        h = fleet.submit(evs[2], rid=2)
+        fleet.drain()
+        assert h.done
+        np.testing.assert_array_equal(
+            np.asarray(h.readout), _reference_readouts(4)[2])
+        fleet.shutdown()
+
+    def test_scheduler_counts_and_queue_bound(self):
+        sched = SessionScheduler([], max_queue=1)
+        req = StreamRequest(rid=0, events=np.zeros((3,) + HW + (2,),
+                                                   np.float32))
+
+        class H:
+            rid, request, status = 0, req, "queued"
+
+        sched.admit(H())
+        with pytest.raises(FleetOverloaded):
+            sched.admit(H())
+        assert (sched.submitted, sched.shed, sched.queue_depth) == (1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Replica crash -> deterministic re-placement.
+# ---------------------------------------------------------------------------
+class TestCrashReplacement:
+    def test_killed_replicas_streams_replay_bit_exact(self):
+        evs = _streams(6)
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3))
+        hs = [fleet.submit(e, rid=i) for i, e in enumerate(evs)]
+        fleet.step()  # streams mid-flight on both replicas
+        requeued = fleet.kill_replica(0)
+        assert requeued and all(h.status == "queued" for h in requeued)
+        assert fleet.crashes == 1
+        fleet.drain()
+        ref = _reference_readouts()
+        for h in hs:
+            assert h.done
+            np.testing.assert_array_equal(np.asarray(h.readout), ref[h.rid])
+            # Nothing lands on the dead replica after the crash.
+            assert h.placements[-1][0] == 1
+        fleet.shutdown()
+
+    def test_kill_is_idempotent_and_all_dead_fails_loudly(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=1, capacity=2, chunk_T=3))
+        fleet.submit(_streams(1)[0], rid=0)
+        fleet.kill_replica(0)
+        assert fleet.kill_replica(0) == []
+        with pytest.raises(RuntimeError, match="dead"):
+            fleet.drain()
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle edges (bugfix sweep).
+# ---------------------------------------------------------------------------
+class TestLifecycle:
+    def test_submit_after_shutdown_raises(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(capacity=2, chunk_T=3))
+        fleet.shutdown()
+        fleet.shutdown()  # idempotent
+        with pytest.raises(RuntimeError, match="shut down"):
+            fleet.submit(_streams(1)[0])
+
+    def test_duplicate_rid_rejected(self):
+        with spidr.serve(_compiled(),
+                         ServeConfig(capacity=2, chunk_T=3)) as fleet:
+            fleet.submit(_streams(1)[0], rid=7)
+            with pytest.raises(ValueError, match="already submitted"):
+                fleet.submit(_streams(1)[0], rid=7)
+            fleet.drain()
+        assert fleet.closed  # the with-block shut it down
+
+    def test_stream_yields_incremental_progress(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(capacity=2, chunk_T=3))
+        h = fleet.submit(_streams(1)[0], rid=0)
+        updates = list(fleet.stream(h))
+        assert [u.timesteps for u in updates] == [3, 6]
+        assert updates[-1].status == "done"
+        np.testing.assert_array_equal(
+            np.asarray(updates[-1].readout), _reference_readouts(1)[0])
+        fleet.shutdown()
+
+    def test_double_close_session_is_noop(self):
+        sess = _compiled().open_stream(capacity=2, chunk_T=3)
+        slot = sess.open()
+        sess.close(slot)
+        sess.close(slot)  # per-slot double close: no-op
+        sess.close()
+        sess.close()      # whole-session double close: no-op
+        assert sess.closed
+        with pytest.raises(RuntimeError, match="closed StreamSession"):
+            sess.open()
+        with pytest.raises(RuntimeError, match="closed StreamSession"):
+            sess.step({})
+
+    def test_iter_chunks_serves_and_frees_its_slot(self):
+        ev = _streams(1)[0]
+        with _compiled().open_stream(capacity=2, chunk_T=3) as sess:
+            ups = list(sess.iter_chunks(ev))
+            assert [u.timesteps for u in ups] == [3, 6]
+            np.testing.assert_array_equal(
+                np.asarray(ups[-1].readout), _reference_readouts(1)[0])
+            assert sess.occupancy == 0  # the helper closed its own slot
+        assert sess.closed
+
+
+# ---------------------------------------------------------------------------
+# Threaded mode.
+# ---------------------------------------------------------------------------
+class TestThreadedMode:
+    def test_threaded_fleet_drains_bit_exact(self):
+        fleet = spidr.serve(_compiled(), ServeConfig(
+            n_replicas=2, capacity=2, chunk_T=3, mode="threaded"))
+        hs = [fleet.submit(e, rid=i) for i, e in enumerate(_streams(6))]
+        fleet.drain(timeout=120)
+        ref = _reference_readouts()
+        for h in hs:
+            np.testing.assert_array_equal(np.asarray(h.readout), ref[h.rid])
+        with pytest.raises(RuntimeError, match="threaded"):
+            fleet.step()
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Fleet telemetry.
+# ---------------------------------------------------------------------------
+class TestFleetTelemetry:
+    def test_fleet_metrics_flow_through_the_registry(self):
+        prev = obs.default_registry()
+        obs.set_default_registry(obs.MetricsRegistry(enabled=True))
+        try:
+            fleet = spidr.serve(_compiled(), ServeConfig(
+                n_replicas=2, capacity=2, chunk_T=3))
+            hs = [fleet.submit(e, rid=i) for i, e in enumerate(_streams(3))]
+            fleet.step()
+            fleet.migrate(next(h.rid for h in hs
+                               if h.status == "running"))
+            fleet.drain()
+            fleet.shutdown()
+            d = obs.default_registry().to_dict()
+            assert d["spidr_fleet_submitted_total"][0]["value"] == 3.0
+            assert d["spidr_fleet_completed_total"][0]["value"] == 3.0
+            assert d["spidr_fleet_migrations_total"][0]["value"] == 1.0
+            assert "spidr_fleet_tick_seconds" in d
+            assert "spidr_fleet_stream_latency_seconds" in d
+            assert "spidr_serve_admissions_total" in d  # worker-level
+        finally:
+            obs.set_default_registry(prev)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shims (the old public serving surface).
+# ---------------------------------------------------------------------------
+class TestDeprecatedShims:
+    def test_old_names_warn_but_serve(self):
+        from repro.launch import serve as launch_serve
+
+        assert launch_serve.SNNRequest is StreamRequest
+        with pytest.warns(DeprecationWarning, match="StreamingSNNServer"):
+            srv = launch_serve.StreamingSNNServer(
+                _compiled(), capacity=2, chunk_T=3)
+        assert isinstance(srv, StreamWorker)
+        ev = _streams(1)[0]
+        srv.submit(StreamRequest(rid=0, events=ev))
+        while srv.step():
+            pass
+        np.testing.assert_array_equal(
+            np.asarray(srv.done[0].readout), _reference_readouts(1)[0])
+        srv.shutdown()
+        with pytest.warns(DeprecationWarning, match="SNNServer"):
+            batch = launch_serve.SNNServer(_compiled(), capacity=2)
+        batch.submit(StreamRequest(rid=0, events=ev))
+        while batch.step():
+            pass
+        assert len(batch.done) == 1
+
+    def test_new_path_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            fleet = spidr.serve(_compiled(), ServeConfig(
+                capacity=2, chunk_T=3))
+            fleet.submit(_streams(1)[0], rid=0)
+            fleet.drain()
+            fleet.shutdown()

@@ -18,6 +18,9 @@ EXPECTED_REPRO = {
     "DeployTarget",
     "StreamSession",
     "VerifyReport",
+    # The serving fleet (spidr.serve).
+    "Fleet",
+    "ServeConfig",
     # Network construction.
     "SNNSpec",
     "gesture_net",
@@ -34,14 +37,19 @@ EXPECTED_SPIDR = {
     "BACKENDS",
     "CompiledSNN",
     "DeployTarget",
+    "Fleet",
+    "FleetOverloaded",
     "PRECISION_PAIRS",
+    "ServeConfig",
     "SlotUpdate",
+    "StreamHandle",
     "StreamSession",
     "VerifyReport",
     "compile",
     "load",
     "read_snapshot_meta",
     "restore",
+    "serve",
 }
 
 
@@ -72,3 +80,5 @@ class TestPublicSurface:
         assert repro.DeployTarget is spidr.DeployTarget
         assert repro.StreamSession is spidr.StreamSession
         assert repro.VerifyReport is spidr.VerifyReport
+        assert repro.Fleet is spidr.Fleet
+        assert repro.ServeConfig is spidr.ServeConfig

@@ -12,7 +12,7 @@ cores, fused-Pallas and jnp backends) the drill:
      tick — after the session stepped, before any bookkeeping, the worst
      possible instant;
   3. launches a second child that restores from the latest on-disk
-     snapshot (``launch.serve.StreamingSNNServer.restore``) and serves to
+     snapshot (``repro.serving.StreamWorker.restore``) and serves to
      completion;
   4. asserts the restored results are byte-identical to the reference for
      every stream — zero sessions lost state.
@@ -75,7 +75,7 @@ def build(cfg: dict):
 def make_requests(cfg: dict, seed: int) -> dict:
     """The drill workload: streams of *differing* lengths (slot churn),
     regenerated identically in every process from the seed alone."""
-    from repro.launch.serve import SNNRequest
+    from repro.serving import StreamRequest
 
     spec_c = 2
     h, w = cfg["hw"]
@@ -85,7 +85,7 @@ def make_requests(cfg: dict, seed: int) -> dict:
     for rid in range(cfg["n_streams"]):
         t = int(rng.integers(max(2, t_max // 2), t_max + 1))
         ev = (rng.random((t, h, w, spec_c)) < 0.1).astype(np.float32)
-        reqs[rid] = SNNRequest(rid=rid, events=ev)
+        reqs[rid] = StreamRequest(rid=rid, events=ev)
     return reqs
 
 
@@ -100,10 +100,10 @@ def results_of(server) -> dict:
 
 def serve_reference(cfg: dict, seed: int):
     """Uninterrupted run; returns (results, n_ticks)."""
-    from repro.launch.serve import StreamingSNNServer
+    from repro.serving import StreamWorker
 
     compiled, _ = build(cfg)
-    server = StreamingSNNServer(compiled, capacity=cfg["capacity"],
+    server = StreamWorker(compiled, capacity=cfg["capacity"],
                                 chunk_T=cfg["chunk_T"])
     for rid, req in sorted(make_requests(cfg, seed).items()):
         server.submit(req)
@@ -119,7 +119,7 @@ def child_serve(cfg: dict, seed: int, snap_dir: str, die_at: int) -> None:
     """Serve with per-tick snapshots; SIGKILL ourselves mid-tick at
     ``die_at`` — after the session stepped, before bookkeeping/snapshot."""
     from repro import obs
-    from repro.launch.serve import StreamingSNNServer
+    from repro.serving import StreamWorker
 
     # Trace the whole doomed run: compile/autotune spans plus every
     # serve.tick/run_chunk up to the fatal tick.  The trace is exported
@@ -128,7 +128,7 @@ def child_serve(cfg: dict, seed: int, snap_dir: str, die_at: int) -> None:
     obs.enable_tracing()
     tracer = obs.default_tracer()
     compiled, _ = build(cfg)
-    server = StreamingSNNServer(compiled, capacity=cfg["capacity"],
+    server = StreamWorker(compiled, capacity=cfg["capacity"],
                                 chunk_T=cfg["chunk_T"],
                                 snapshot_dir=snap_dir, snapshot_every=1)
 
@@ -148,9 +148,9 @@ def child_serve(cfg: dict, seed: int, snap_dir: str, die_at: int) -> None:
 
 def child_restore(cfg: dict, seed: int, snap_dir: str, out: str) -> None:
     """Fresh process: restore the latest snapshot, serve to completion."""
-    from repro.launch.serve import StreamingSNNServer
+    from repro.serving import StreamWorker
 
-    server = StreamingSNNServer.restore(snap_dir,
+    server = StreamWorker.restore(snap_dir,
                                         make_requests(cfg, seed))
     resumed_at = server.ticks
     while server.step():
