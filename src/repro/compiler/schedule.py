@@ -35,7 +35,7 @@ import jax
 from ..core.network import SNNSpec
 from ..core.quant import QuantSpec
 from .ir import build_graph
-from .partition import CoreGrid, LayerPartition, partition_graph
+from .partition import ChannelSlice, CoreGrid, LayerPartition, partition_graph
 from .select import LayerPlan, select_layer
 
 __all__ = ["CoreSchedule", "LayerSchedule", "compile_network"]
@@ -62,7 +62,7 @@ class LayerSchedule:
         """Total AER copies per input spike crossing cores (sum per core)."""
         return float(sum(self.route_fractions))
 
-    def slice_of(self, core: int):
+    def slice_of(self, core: int) -> ChannelSlice | None:
         """This layer's channel slice on ``core`` (None if idle there)."""
         for s in self.slices:
             if s.core == core:

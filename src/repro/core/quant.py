@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "PRECISION_PAIRS",
     "QuantSpec",
     "SUPPORTED_PRECISIONS",
     "quantize",
@@ -90,6 +91,13 @@ class QuantSpec:
 
 
 SUPPORTED_PRECISIONS = tuple(QuantSpec(b) for b in (4, 6, 8))
+
+# The silicon's supported (B_weight, B_vmem) pairs, derived from the one
+# invariant above.  THE single source of truth for precision validation:
+# ``spidr.DeployTarget``, ``snn.export`` and ``repro.analysis`` all import
+# this constant rather than restating the pairs.
+PRECISION_PAIRS = tuple(
+    (s.weight_bits, s.vmem_bits) for s in SUPPORTED_PRECISIONS)
 
 
 def _scale_for(w: jax.Array, spec: QuantSpec, axis=None) -> jax.Array:

@@ -39,7 +39,12 @@ import numpy as np
 from ..checkpoint.checkpoint import Checkpointer
 from ..compiler import compile_network
 from ..core.network import SNNSpec, run_snn
-from ..core.quant import QuantSpec, po2_quantize, requantize_threshold
+from ..core.quant import (
+    PRECISION_PAIRS,
+    QuantSpec,
+    po2_quantize,
+    requantize_threshold,
+)
 from ..engine.inference import (
     EngineConfig,
     EngineLayer,
@@ -253,7 +258,7 @@ def load_exported(ckpt: Checkpointer, spec: SNNSpec,
             raise ValueError(
                 f"exported checkpoint step {step} is corrupted: metadata "
                 f"field '{field}' is missing")
-    if info["weight_bits"] not in (4, 6, 8):
+    if info["weight_bits"] not in {w for w, _ in PRECISION_PAIRS}:
         raise ValueError(
             f"exported checkpoint step {step} is corrupted: weight_bits="
             f"{info['weight_bits']!r} is not a supported precision")

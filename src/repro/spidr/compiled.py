@@ -28,7 +28,8 @@ import functools
 import json
 import os
 import time
-from typing import Optional
+import warnings
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +69,12 @@ from ..snn.export import (
     verify_roundtrip,
 )
 from .target import DeployTarget, _require_positive_int
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from ..analysis import AnalysisReport
+
+#: ``spidr.compile(..., check=...)`` modes for the static-analysis gate.
+CHECK_MODES = ("strict", "warn", "off")
 
 __all__ = [
     "CompiledSNN",
@@ -363,6 +370,7 @@ class CompiledSNN:
         self._base_engine = base_engine  # single-core engine (oracle)
         self._jit_run = None
         self._sessions: list = []       # every StreamSession opened here
+        self._analysis: Optional["AnalysisReport"] = None
 
     # -- introspection -----------------------------------------------------
     @property
@@ -373,6 +381,22 @@ class CompiledSNN:
     @property
     def n_cores(self) -> int:
         return self.target.n_cores
+
+    def report(self) -> "AnalysisReport":
+        """The deployment's static-analysis report (``repro.analysis``).
+
+        Overflow certificates plus schedule verification for *this*
+        network at *this* precision and core count.  Populated by
+        :func:`compile` unless it ran with ``check="off"``; computed
+        lazily here otherwise — so the certificate is always available,
+        the ``check`` mode only decides whether findings gate the build.
+        """
+        if self._analysis is None:
+            from .. import analysis
+
+            self._analysis = analysis.analyze_deployment(
+                self.spec, self.target.qspec, self.schedule)
+        return self._analysis
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return (f"CompiledSNN({self.spec.name!r}, "
@@ -704,7 +728,8 @@ def _apply_schedule(base: SNNEngine, spec: SNNSpec, target: DeployTarget,
 
 
 def compile(network, params=None, target: Optional[DeployTarget] = None,
-            *, spec: Optional[SNNSpec] = None) -> CompiledSNN:
+            *, spec: Optional[SNNSpec] = None,
+            check: str = "warn") -> CompiledSNN:
     """Deploy a network onto a :class:`DeployTarget`.
 
     Two forms, one per quantization provenance:
@@ -724,12 +749,38 @@ def compile(network, params=None, target: Optional[DeployTarget] = None,
     ``target`` defaults to ``DeployTarget()`` (4/7-bit, single core, jnp
     backend).  ``target.n_cores > 1`` compiles the network across a core
     grid — bit-exact with single-core execution.
+
+    ``check`` gates the build on deploy-time static analysis
+    (``repro.analysis``: overflow certification + schedule
+    verification).  ``"strict"`` raises
+    :class:`~repro.analysis.AnalysisError` on any error-level finding,
+    ``"warn"`` (the default) emits a ``RuntimeWarning``, ``"off"`` skips
+    the analysis at compile time (``CompiledSNN.report()`` still
+    computes it on demand).
     """
+    if check not in CHECK_MODES:
+        raise ValueError(
+            f"check must be one of {CHECK_MODES}, got {check!r}")
     target = target or DeployTarget()
     with obs_trace.default_tracer().span(
             "spidr.compile", cat="compile", backend=target.backend,
             n_cores=target.n_cores, weight_bits=target.weight_bits):
-        return _compile(network, params, target, spec)
+        compiled = _compile(network, params, target, spec)
+    if check != "off":
+        from .. import analysis
+
+        report = analysis.analyze_deployment(
+            compiled.spec, target.qspec, compiled.schedule)
+        compiled._analysis = report
+        if report.errors:
+            if check == "strict":
+                raise analysis.AnalysisError(report)
+            warnings.warn(
+                f"static analysis found {len(report.errors)} violation(s) "
+                f"in {report.subject} — see CompiledSNN.report() "
+                "(compile with check='strict' to fail the build)",
+                RuntimeWarning, stacklevel=2)
+    return compiled
 
 
 def _compile(network, params, target: DeployTarget,

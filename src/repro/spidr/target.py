@@ -19,13 +19,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from ..core.quant import QuantSpec
+from ..core.quant import PRECISION_PAIRS, QuantSpec
 from ..kernels.fused_lif_gemm import DEFAULT_BLOCK
 
 __all__ = ["BACKENDS", "DeployTarget", "PRECISION_PAIRS"]
-
-# The silicon's supported weight/Vmem precision pairs (B_vmem = 2*B_w - 1).
-PRECISION_PAIRS = ((4, 7), (6, 11), (8, 15))
 
 # Execution backends: the Pallas fused kernel, its pure-jnp bit-exact
 # oracle, and the unjitted python-loop reference (slow; for verification).

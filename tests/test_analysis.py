@@ -1,0 +1,464 @@
+"""Deploy-time static verification (``repro.analysis``).
+
+What this suite pins:
+
+  * both paper networks **certify** at every silicon precision pair, and
+    the emitted overflow certificate survives independent re-derivation;
+  * each of the four passes **catches its seeded negative** — a synthetic
+    IR that overflows int32, a corrupted ``CoreSchedule``, an illegal
+    precision pair, a lock-discipline fixture — with the exact diagnostic
+    code, location and message the docs promise;
+  * tampered certificates fail ``check_certificate``, not just eyeballs;
+  * the facade wiring: ``spidr.compile(..., check=...)`` gates builds,
+    ``CompiledSNN.report()`` always has the certificate;
+  * the sync-vs-threaded stress harness agrees bit for bit on a real
+    fleet;
+  * the baseline ratchet waives old findings and fails new ones.
+"""
+import dataclasses
+import functools
+import json
+import types
+import warnings
+
+import jax
+import pytest
+
+from repro import analysis, spidr
+from repro.analysis import (
+    AnalysisError,
+    AnalysisReport,
+    Violation,
+    analyze_deployment,
+    certify_overflow,
+    check_certificate,
+    check_lock_discipline,
+    check_purity,
+    check_schedule,
+    check_serving,
+    stress_fleet,
+)
+from repro.analysis.__main__ import main as analysis_main
+from repro.compiler import compile_network
+from repro.compiler.ir import LayerNode, NetworkGraph
+from repro.configs import spidr_gesture
+from repro.core.modes import LayerShape
+from repro.core.network import gesture_net, init_params, optical_flow_net
+from repro.core.quant import PRECISION_PAIRS, QuantSpec
+
+HW, T = (16, 16), 6
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(n_cores=1, check="warn"):
+    spec = spidr_gesture.reduced(hw=HW, timesteps=T)
+    params = init_params(jax.random.PRNGKey(0), spec)
+    return spidr.compile(spec, params, spidr.DeployTarget(
+        weight_bits=4, backend="jnp", chunk_T=3, stream_capacity=2,
+        n_cores=n_cores), check=check)
+
+
+# ---------------------------------------------------------------------------
+# Overflow certification.
+# ---------------------------------------------------------------------------
+class TestOverflow:
+    @pytest.mark.parametrize("net", [gesture_net, optical_flow_net])
+    @pytest.mark.parametrize("bits", [w for w, _ in PRECISION_PAIRS])
+    def test_paper_networks_certify(self, net, bits):
+        report = certify_overflow(net(), QuantSpec(bits))
+        assert report.ok and not report.violations
+        cert = report.certificates["overflow"]
+        assert cert["ok"] and cert["saturation_points"] == 1
+        assert check_certificate(cert) == []
+
+    def test_synthetic_ir_overflows_int32(self):
+        # fan_in * |w_min| = 2^28 * 2^7 = 2^35 >> int32 — a single spiking
+        # frame can wrap the accumulator before the saturation point.
+        graph = NetworkGraph("synthetic", (LayerNode(
+            0, "fc", LayerShape.fc(1 << 28, 4), (),
+            in_positions=1 << 28, out_positions=4),))
+        report = certify_overflow(graph, QuantSpec(8))
+        assert not report.ok
+        (v,) = report.violations
+        assert v.pass_name == "overflow" and v.code == "OVF001"
+        assert v.location == "synthetic.L0"
+        assert v.message == (
+            "int32 accumulator can wrap before its single saturation "
+            "point: fan_in 268435456 x |w|_max 128 = 34359738368 exceeds "
+            "2147483647; any 16777216 simultaneously-active inputs "
+            "overflows at 8/15-bit precision")
+        cert = report.certificates["overflow"]
+        assert cert["ok"] is False
+        assert cert["layers"][0]["min_violating_active_inputs"] == 16777216
+        assert check_certificate(cert) == []  # honest about failing
+
+    def test_gesture_wraps_at_16_bit_accumulator(self):
+        # The docs example: safe on the silicon's int32, provably unsafe
+        # at 8/15-bit on a hypothetical 16-bit accumulator — the interim
+        # of the Vmem accumulate reaches 2*|v_min| = 2^15 = int16 max + 1.
+        report = certify_overflow(gesture_net(), QuantSpec(8), acc_bits=16)
+        assert not report.ok
+        assert report.violations and all(
+            v.code == "OVF002" for v in report.violations)
+        assert "neuron-step interim" in report.violations[0].message
+        assert check_certificate(report.certificates["overflow"]) == []
+
+    def test_gesture_gemm_wraps_on_narrow_accumulator(self):
+        # OVF001 on a real network: at 4/7-bit an 11-bit accumulator is
+        # one bit short of the widest layer's worst case (144 * 8 = 1152
+        # > 1023), and the certificate names the minimal violating count.
+        report = certify_overflow(gesture_net(), QuantSpec(4), acc_bits=11)
+        bad = [v for v in report.violations if v.code == "OVF001"]
+        assert bad and all("L" in v.location for v in bad)
+        cert = report.certificates["overflow"]
+        worst = max(cert["layers"], key=lambda f: f["fan_in"])
+        assert worst["min_violating_active_inputs"] == 1023 // 8 + 1
+        assert check_certificate(cert) == []
+
+    def test_tampered_certificate_fails_reverification(self):
+        graph = NetworkGraph("synthetic", (LayerNode(
+            0, "fc", LayerShape.fc(1 << 28, 4), (),
+            in_positions=1 << 28, out_positions=4),))
+        cert = certify_overflow(graph, QuantSpec(8)).certificates["overflow"]
+        cert = json.loads(json.dumps(cert))  # a round-tripped artifact
+        cert["ok"] = True
+        problems = check_certificate(cert)
+        assert any("re-derivation gives False" in p for p in problems)
+
+        good = certify_overflow(gesture_net(), QuantSpec(4))
+        cert = json.loads(json.dumps(good.certificates["overflow"]))
+        cert["layers"][0]["fan_in"] = 7
+        assert check_certificate(cert)  # stale primitive fact detected
+
+    def test_rejects_non_network(self):
+        with pytest.raises(TypeError, match="SNNSpec or a compiler"):
+            certify_overflow(object(), QuantSpec(4))
+
+
+# ---------------------------------------------------------------------------
+# Schedule verification.
+# ---------------------------------------------------------------------------
+def _schedule(net=gesture_net, n_cores=4, bits=4):
+    return compile_network(net(), n_cores=n_cores, qspec=QuantSpec(bits))
+
+
+class TestSchedule:
+    @pytest.mark.parametrize("net", [gesture_net, optical_flow_net])
+    @pytest.mark.parametrize("cores", [1, 4])
+    def test_compiled_schedules_verify(self, net, cores):
+        spec = net()
+        schedule = compile_network(spec, n_cores=cores, qspec=QuantSpec(4))
+        report = check_schedule(schedule, spec=spec)
+        assert report.ok and not report.violations
+        cert = report.certificates["schedule"]
+        assert cert["ok"] and cert["n_cores"] == cores
+        if cores > 1:
+            assert cert["conservation"]  # the replay actually ran
+
+    def test_over_capacity_schedule(self):
+        # Shrink the grid under a 4-core placement: every slice on cores
+        # 2..3 now over-subscribes the declared capacity.
+        sched = _schedule(n_cores=4)
+        bad = dataclasses.replace(sched, n_cores=2)
+        report = check_schedule(bad)
+        assert not report.ok
+        codes = {v.code for v in report.violations}
+        assert "SCH001" in codes and "SCH002" in codes
+        v001 = next(v for v in report.violations if v.code == "SCH001")
+        assert v001.location == sched.name
+        assert v001.message == (
+            "schedule declares n_cores=2 but its grid has 4 cores")
+        v002 = next(v for v in report.violations if v.code == "SCH002")
+        assert "outside the grid of 2 cores" in v002.message
+        assert v002.location.startswith(f"{sched.name}.L")
+
+    def test_illegal_precision_pair(self):
+        sched = _schedule(n_cores=2)
+        fake = types.SimpleNamespace(weight_bits=5, vmem_bits=9)
+        bad = dataclasses.replace(sched, qspec=fake)
+        report = check_schedule(bad)
+        v = next(v for v in report.violations if v.code == "SCH010")
+        assert v.location == sched.name
+        assert v.message == (
+            "illegal precision pair 5/9: supported pairs are 4/7, 6/11, "
+            "8/15")
+
+    def test_tampered_route_fractions(self):
+        sched = _schedule(n_cores=4)
+        layers = list(sched.layers)
+        victim = next(i for i, l in enumerate(layers)
+                      if any(f > 0 for f in l.route_fractions))
+        fr = list(layers[victim].route_fractions)
+        fr[0] = 2.0  # impossible: more than every spike routed
+        layers[victim] = dataclasses.replace(
+            layers[victim], route_fractions=tuple(fr))
+        bad = dataclasses.replace(sched, layers=tuple(layers))
+        codes = {v.code for v in check_schedule(bad).violations}
+        assert "SCH031" in codes
+
+    def test_conservation_replay_catches_forged_plan(self):
+        # Swap one layer's plan mapping for another layer's: structurally
+        # plausible, but the static cycle replay no longer matches the
+        # cost model's attribution.
+        spec = gesture_net()
+        sched = compile_network(spec, n_cores=4, qspec=QuantSpec(4))
+        report = check_schedule(sched, spec=spec)
+        assert report.ok
+        layers = list(sched.layers)
+        donor = next(l for l in layers
+                     if l.plan.mapping != layers[0].plan.mapping)
+        forged = dataclasses.replace(
+            layers[0], plan=dataclasses.replace(
+                layers[0].plan, mapping=donor.plan.mapping))
+        bad = dataclasses.replace(
+            sched, layers=tuple([forged] + layers[1:]))
+        codes = {v.code for v in check_schedule(bad, spec=spec).violations}
+        assert codes & {"SCH023", "SCH040", "SCH041", "SCH042", "SCH043"}
+
+
+# ---------------------------------------------------------------------------
+# Concurrency lint + stress harness.
+# ---------------------------------------------------------------------------
+_RACY = '''\
+import threading
+import time
+
+
+class Racy:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        self.count += 1
+
+    def slow(self):
+        with self._lock:
+            time.sleep(0.1)
+'''
+
+
+class TestConcurrency:
+    def test_serving_package_is_clean(self):
+        report = check_serving()
+        assert report.ok and not report.violations
+
+    def test_seeded_fixture_caught(self):
+        report = check_lock_discipline(_RACY, "fixture.py")
+        assert {v.code for v in report.violations} == {"CON001", "CON002"}
+        v1 = next(v for v in report.violations if v.code == "CON001")
+        assert v1.location == "fixture.py:11"
+        assert v1.message == (
+            "Racy.bump writes self.count without holding self._lock")
+        v2 = next(v for v in report.violations if v.code == "CON002")
+        assert v2.location == "fixture.py:15"
+        assert v2.message == (
+            "Racy.slow calls time.sleep() while holding self._lock — "
+            "blocking under the fleet lock stalls every replica")
+
+    def test_locked_helper_fixpoint(self):
+        src = _RACY.replace(
+            "    def bump(self):\n        self.count += 1\n",
+            "    def bump(self):\n"
+            "        with self._lock:\n"
+            "            self._inc()\n\n"
+            "    def _inc(self):\n"
+            "        self.count += 1\n")
+        report = check_lock_discipline(src, "fixture.py")
+        assert not any(v.code == "CON001" for v in report.violations)
+
+    def test_stress_sync_vs_threaded_bit_exact(self):
+        result = stress_fleet(_compiled(), n_streams=4, n_replicas=2,
+                              seed=7)
+        assert result.ok, result.mismatches
+        assert result.n_streams == 4
+        assert result.ticks_sync > 0 and result.ticks_threaded > 0
+
+
+# ---------------------------------------------------------------------------
+# Purity lint.
+# ---------------------------------------------------------------------------
+_IMPURE = '''\
+import functools
+import random
+import time
+
+import jax
+from dataclasses import dataclass
+from jax.tree_util import register_pytree_node
+
+_CACHE = {}
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def step(x, n):
+    t0 = time.perf_counter()
+    return x * _CACHE["scale"] + random.random() + t0
+
+
+def scale_int(x):
+    return float(x / 2) + 0.5
+
+
+@dataclass
+class BadSched:
+    slices: list
+
+
+register_pytree_node(BadSched, lambda s: ((), s), lambda s, _: s)
+'''
+
+
+class TestPurity:
+    def test_repo_is_clean(self):
+        report = check_purity()
+        assert report.ok, report.summary()
+
+    def test_seeded_fixture_caught(self):
+        report = analysis.check_module_purity(_IMPURE, "fixture.py")
+        codes = sorted({v.code for v in report.violations})
+        assert codes == ["PUR001", "PUR002", "PUR003", "PUR004"]
+        msgs = {v.code: v for v in report.violations}
+        assert msgs["PUR001"].location in ("fixture.py:14", "fixture.py:15")
+        assert "host-side time/randomness" in msgs["PUR001"].message
+        assert "mutable module global '_CACHE'" in msgs["PUR002"].message
+        assert msgs["PUR003"].location == "fixture.py:19"
+        assert msgs["PUR004"].location == "fixture.py:27"
+        assert "BadSched is not frozen" in msgs["PUR004"].message
+
+    def test_jax_random_is_safe(self):
+        src = (
+            "import jax\n"
+            "from jax import random\n"
+            "@jax.jit\n"
+            "def step(key, x):\n"
+            "    return x + random.normal(key, x.shape)\n")
+        report = analysis.check_module_purity(src, "ok.py")
+        assert report.ok
+
+    def test_frozen_immutable_leafless_pytree_passes(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "from jax.tree_util import register_pytree_node\n"
+            "@dataclass(frozen=True)\n"
+            "class Sched:\n"
+            "    name: str\n"
+            "    cores: tuple\n"
+            "register_pytree_node(Sched, lambda s: ((), s), "
+            "lambda s, _: s)\n")
+        assert analysis.check_module_purity(src, "ok.py").ok
+
+    def test_leafy_pytree_exempt(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "from jax.tree_util import register_pytree_node\n"
+            "@dataclass\n"
+            "class State:\n"
+            "    v: list\n"
+            "register_pytree_node(State, lambda s: ((s.v,), None), "
+            "lambda _, c: State(list(c)))\n")
+        assert analysis.check_module_purity(src, "ok.py").ok
+
+
+# ---------------------------------------------------------------------------
+# Facade wiring: spidr.compile(check=...) + CompiledSNN.report().
+# ---------------------------------------------------------------------------
+class TestFacade:
+    def test_compile_populates_report(self):
+        c = _compiled()
+        rep = c.report()
+        assert isinstance(rep, AnalysisReport) and rep.ok
+        assert "overflow" in rep.certificates
+        assert check_certificate(rep.certificates["overflow"]) == []
+
+    def test_multicore_report_includes_schedule_pass(self):
+        rep = _compiled(n_cores=4).report()
+        assert set(rep.passes) == {"overflow", "schedule"}
+        assert rep.ok
+
+    def test_check_off_is_lazy(self):
+        c = _compiled(check="off")
+        assert c._analysis is None
+        assert c.report().ok
+        assert c._analysis is not None
+
+    def test_invalid_mode_rejected(self):
+        spec = spidr_gesture.reduced(hw=HW, timesteps=T)
+        params = init_params(jax.random.PRNGKey(0), spec)
+        with pytest.raises(ValueError, match="check must be one of"):
+            spidr.compile(spec, params, check="nope")
+
+    def test_strict_raises_and_warn_warns(self, monkeypatch):
+        spec = spidr_gesture.reduced(hw=HW, timesteps=T)
+        params = init_params(jax.random.PRNGKey(0), spec)
+        seeded = AnalysisReport(
+            subject="seeded", passes=("overflow",),
+            violations=(Violation(
+                pass_name="overflow", code="OVF001",
+                location="seeded.L0", message="seeded failure"),))
+        monkeypatch.setattr(
+            analysis, "analyze_deployment", lambda *a, **k: seeded)
+        with pytest.raises(AnalysisError) as err:
+            spidr.compile(spec, params, check="strict")
+        assert err.value.report is seeded
+        assert "seeded failure" in str(err.value)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            c = spidr.compile(spec, params, check="warn")
+        assert any("static analysis found 1 violation" in str(w.message)
+                   for w in caught)
+        assert c.report() is seeded
+
+
+# ---------------------------------------------------------------------------
+# Report plumbing, baseline ratchet, CLI.
+# ---------------------------------------------------------------------------
+class TestReportAndCLI:
+    def test_violation_key_excludes_message(self):
+        a = Violation("overflow", "OVF001", "net.L0", "run-dependent 123")
+        b = Violation("overflow", "OVF001", "net.L0", "run-dependent 456")
+        assert a.key == b.key == "overflow:OVF001:net.L0"
+        with pytest.raises(ValueError, match="severity"):
+            Violation("overflow", "OVF001", "net.L0", "m", severity="fatal")
+
+    def test_report_json_roundtrip(self):
+        rep = certify_overflow(gesture_net(), QuantSpec(4))
+        back = AnalysisReport.from_dict(json.loads(rep.to_json()))
+        assert back.subject == rep.subject
+        assert back.certificates == json.loads(
+            json.dumps(rep.certificates))
+
+    def test_baseline_ratchet(self, tmp_path):
+        old = Violation("schedule", "SCH001", "net", "old finding")
+        new = Violation("schedule", "SCH002", "net.L0", "new finding")
+        path = tmp_path / "baseline.json"
+        analysis.write_baseline(str(path), [old])
+        waived = analysis.load_baseline(str(path))
+        assert analysis.new_violations([old, new], waived) == (new,)
+
+    def test_cli_certifies_and_writes_artifact(self, tmp_path, capsys):
+        out = tmp_path / "report.json"
+        rc = analysis_main([
+            "--network", "gesture", "--bits", "4", "--cores", "1",
+            "--skip-lints", "--json", str(out)])
+        assert rc == 0
+        data = json.loads(out.read_text())
+        assert data["ok"] is True
+        assert any("overflow" in k for k in data["certificates"])
+        assert "certified" in capsys.readouterr().out
+
+    def test_cli_baseline_flow(self, tmp_path):
+        # A corrupted deployment fails ... unless baselined.
+        base = tmp_path / "b.json"
+        rep = certify_overflow(
+            gesture_net(), QuantSpec(4), acc_bits=16)
+        analysis.write_baseline(str(base), rep.violations)
+        waived = analysis.load_baseline(str(base))
+        assert analysis.new_violations(rep.violations, waived) == ()
+
+    def test_analyze_deployment_merges_passes(self):
+        spec = gesture_net()
+        sched = compile_network(spec, n_cores=4, qspec=QuantSpec(4))
+        rep = analyze_deployment(spec, QuantSpec(4), sched)
+        assert set(rep.passes) == {"overflow", "schedule"}
+        assert {"overflow", "schedule"} <= set(rep.certificates)

@@ -355,12 +355,12 @@ class TestPipelineTimeline:
 # ---------------------------------------------------------------------------
 class TestServingTelemetry:
     def test_streaming_server_counters(self, compiled1):
-        from repro.launch.serve import SNNRequest, StreamingSNNServer
+        from repro.serving import StreamRequest, StreamWorker
 
         obs.enable_metrics()
-        server = StreamingSNNServer(compiled1, capacity=2, chunk_T=3)
+        server = StreamWorker(compiled1, capacity=2, chunk_T=3)
         for rid in range(3):   # 3 streams into 2 slots: 1+ deferred ticks
-            server.submit(SNNRequest(rid=rid, events=_stream(t=6, seed=rid)))
+            server.submit(StreamRequest(rid=rid, events=_stream(t=6, seed=rid)))
         ticks = 0
         while server.step():
             ticks += 1
@@ -403,12 +403,12 @@ class TestServingTelemetry:
         assert restarts == [1]
 
     def test_rewind_counter_via_injected_fault(self, compiled1):
-        from repro.launch.serve import SNNRequest, StreamingSNNServer
+        from repro.serving import StreamRequest, StreamWorker
 
         obs.enable_metrics()
-        server = StreamingSNNServer(compiled1, capacity=2, chunk_T=3,
+        server = StreamWorker(compiled1, capacity=2, chunk_T=3,
                                     fail_at_tick=1)
-        server.submit(SNNRequest(rid=0, events=_stream(t=6)))
+        server.submit(StreamRequest(rid=0, events=_stream(t=6)))
         while server.step():
             pass
         assert server.restarts == 1

@@ -339,7 +339,7 @@ class TestPipelineResume:
 class TestStreamingServer:
     def test_serves_more_streams_than_capacity_bit_exact(self):
         from repro import spidr
-        from repro.launch.serve import SNNRequest, StreamingSNNServer
+        from repro.serving import StreamRequest, StreamWorker
 
         spec = spidr_gesture.reduced(hw=(16, 16), timesteps=6)
         params = init_params(jax.random.PRNGKey(0), spec)
@@ -352,9 +352,9 @@ class TestStreamingServer:
         ev, _ = make_gesture_batch(jax.random.PRNGKey(1), batch=5,
                                    timesteps=6, hw=(16, 16))
         whole = run_engine(eng, ev)
-        server = StreamingSNNServer(compiled, capacity=2, chunk_T=2)
+        server = StreamWorker(compiled, capacity=2, chunk_T=2)
         for r in range(5):
-            server.submit(SNNRequest(rid=r, events=np.asarray(ev[:, r])))
+            server.submit(StreamRequest(rid=r, events=np.asarray(ev[:, r])))
         ticks = 0
         while server.step():
             ticks += 1

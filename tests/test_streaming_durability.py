@@ -34,7 +34,7 @@ from repro import spidr
 from repro.configs import spidr_gesture, spidr_optflow
 from repro.core.network import init_params
 from repro.engine.streaming import SESSION_SCHEMA_VERSION
-from repro.launch.serve import SNNRequest, StreamingSNNServer
+from repro.serving import StreamRequest, StreamWorker
 from repro.runtime.fault_tolerance import RestartableFailure
 
 HW, T = (16, 16), 6
@@ -348,11 +348,11 @@ def _serve(compiled, lens, seed, chunk_T, snapshot_tick=None, tmp=None):
     tick and finish on a server restored from disk.  Returns {rid: result}."""
     def requests():
         rng = np.random.default_rng(seed)
-        return {rid: SNNRequest(rid=rid, events=(
+        return {rid: StreamRequest(rid=rid, events=(
             rng.random((t,) + HW + (2,)) < 0.1).astype(np.float32))
             for rid, t in enumerate(lens)}
 
-    server = StreamingSNNServer(
+    server = StreamWorker(
         compiled, capacity=2, chunk_T=chunk_T,
         snapshot_dir=tmp if snapshot_tick is not None else None,
         snapshot_every=1 if snapshot_tick is not None else 0)
@@ -360,7 +360,7 @@ def _serve(compiled, lens, seed, chunk_T, snapshot_tick=None, tmp=None):
         server.submit(req)
     while server.step():
         if snapshot_tick is not None and server.ticks >= snapshot_tick:
-            server = StreamingSNNServer.restore(tmp, requests(),
+            server = StreamWorker.restore(tmp, requests(),
                                                 compiled=compiled)
             snapshot_tick = None  # abandoned mid-run, resumed from disk
     return {r.rid: (np.asarray(r.readout).tolist(), r.cycles, r.energy_uj)
@@ -430,7 +430,7 @@ class TestInvariance:
 class TestDurableServer:
     def _requests(self, seed=37, lens=(6, 4, 5, 6)):
         rng = np.random.default_rng(seed)
-        return {rid: SNNRequest(rid=rid, events=(
+        return {rid: StreamRequest(rid=rid, events=(
             rng.random((t,) + HW + (2,)) < 0.1).astype(np.float32))
             for rid, t in enumerate(lens)}
 
@@ -444,18 +444,18 @@ class TestDurableServer:
 
     def test_poisoned_tick_rewinds_and_replays_bit_exactly(self):
         compiled = _compiled(capacity=2)
-        ref = self._run(StreamingSNNServer(compiled, 2, 2),
+        ref = self._run(StreamWorker(compiled, 2, 2),
                         self._requests())
-        srv = StreamingSNNServer(compiled, 2, 2, fail_at_tick=3)
+        srv = StreamWorker(compiled, 2, 2, fail_at_tick=3)
         got = self._run(srv, self._requests())
         assert srv.restarts == 1
         assert got == ref
 
     def test_hung_tick_trips_watchdog_then_recovers(self):
         compiled = _compiled(capacity=2)
-        ref = self._run(StreamingSNNServer(compiled, 2, 2),
+        ref = self._run(StreamWorker(compiled, 2, 2),
                         self._requests())
-        srv = StreamingSNNServer(compiled, 2, 2, watchdog_s=0.05)
+        srv = StreamWorker(compiled, 2, 2, watchdog_s=0.05)
         real_step = srv.sessions.step
         hung = {"n": 0}
 
@@ -476,7 +476,7 @@ class TestDurableServer:
     def test_restart_budget_exhausts_into_failure(self):
         from repro.runtime.fault_tolerance import RestartableFailure as RF
 
-        srv = StreamingSNNServer(_compiled(capacity=2), 2, 2,
+        srv = StreamWorker(_compiled(capacity=2), 2, 2,
                                  max_restarts=2)
 
         def always_poisoned(tick):
